@@ -1,0 +1,54 @@
+"""Shared helpers for the benchmark harness.
+
+Every benchmark emits ``name,us_per_call,derived`` CSV rows (run.py collects
+them).  ``derived`` is a ';'-separated key=value list specific to each
+benchmark (speedups, fractions, projections).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timeit(fn, *args, repeat: int = 3, warmup: int = 1, **kw):
+    """Median wall-clock seconds of ``fn(*args)`` with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def row(name: str, us: float, **derived) -> str:
+    d = ";".join(f"{k}={v}" for k, v in derived.items())
+    return f"{name},{us:.1f},{d}"
+
+
+# TPU v5e roofline constants (the TARGET device; this container is CPU-only).
+V5E = {
+    "peak_flops_bf16": 197e12,  # FLOP/s (MXU)
+    "peak_flops_f32": 49e12,    # MXU f32 ~ 1/4 bf16
+    "vpu_flops": 7e12,          # elementwise f32 ops/s (vector unit)
+    "hbm_bw": 819e9,            # B/s
+    "ici_bw": 50e9,             # B/s/link
+    "pcie_bw": 32e9,            # host->device B/s (transfer-stage projection)
+}
+
+
+def tpu_projection(flops: float, bytes_hbm: float, unit: str = "vpu") -> float:
+    """Roofline lower-bound seconds on one v5e chip.
+
+    ``unit``: 'mxu_f32' / 'mxu_bf16' for matmul-dominated kernels (the MC
+    one-hot table gather), 'vpu' for elementwise-dominated ones (the
+    pairwise diameter sweep) -- using MXU peak for elementwise work would
+    overstate speedups ~25x.
+    """
+    peak = {"mxu_f32": V5E["peak_flops_f32"],
+            "mxu_bf16": V5E["peak_flops_bf16"],
+            "vpu": V5E["vpu_flops"]}[unit]
+    return max(flops / peak, bytes_hbm / V5E["hbm_bw"])

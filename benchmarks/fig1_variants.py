@@ -1,0 +1,80 @@
+"""Paper Fig. 1 analogue: diameter-kernel optimization-variant comparison.
+
+The paper compares 5 CUDA strategies (equal-load baseline, block-based
+atomic reduction, 2D shared memory, local thread accumulators, 1D arrays)
+across three GPUs.  Our TPU analogues (see kernels/diameter.py):
+
+    naive        -- one pass per feature combo (4 launches)
+    fused        -- all 4 combos, one pass              [mem-access opt]
+    tri          -- fused + predicated lower-tri skip   [load balance]
+    seqacc       -- fused + sequential in-kernel accumulator
+                    (the paper's 'local thread accumulators')
+    tri_prefetch -- 1-D grid over upper-tri block pairs via scalar
+                    prefetch (skipped blocks cost no DMA)
+
+For each variant we report: structural FLOPs + HBM bytes (the dry-run
+profile), the v5e roofline projection, and measured interpret-mode wall
+time on a reduced size (execution-semantics check; absolute CPU times are
+not TPU times).  Correctness vs the jnp oracle is asserted.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit, tpu_projection
+from repro.kernels import diameter as dk
+from repro.kernels import ref as ref_k
+
+
+def _cloud(m: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    verts = jnp.asarray(rng.normal(size=(m, 3)) * 50.0, jnp.float32)
+    mask = jnp.ones((m,), jnp.float32)
+    return verts, mask
+
+
+def run(m_interp: int = 2048, m_project: int = 262_144, block: int = 256):
+    verts, mask = _cloud(m_interp)
+    want = np.asarray(ref_k.max_diameters(verts, mask))
+    rows = []
+    for variant in dk.VARIANTS:
+        got = np.asarray(
+            dk.max_diameters_pallas(
+                verts, mask, block=block, variant=variant, interpret=True
+            )
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+        t = timeit(
+            dk.max_diameters_pallas, verts, mask,
+            block=block, variant=variant, interpret=True, repeat=2,
+        )
+        fl = dk.flop_estimate(m_project, block, variant)
+        by = dk.bytes_estimate(m_project, block, variant)
+        proj = tpu_projection(fl, by)
+        rows.append(
+            row(
+                f"fig1/{variant}",
+                t * 1e6,
+                M_project=m_project,
+                flops=f"{fl:.3e}",
+                hbm_bytes=f"{by:.3e}",
+                v5e_proj_ms=f"{proj * 1e3:.2f}",
+                correct="yes",
+            )
+        )
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=2048)
+    args = ap.parse_args(argv)
+    for r in run(m_interp=args.m):
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Paper Fig. 2 analogue: processing time vs case size across 'hardware'.
+
+The paper plots KITS19 feature-extraction time (log-log) on three CPUs and
+three GPUs, showing 8x-2000x GPU speedups growing with vertex count.  In
+this CPU-only container the measurable series is the reference CPU path;
+the TPU series are roofline projections of the Pallas kernels at v5e specs
+(compute term vs HBM term, whichever binds).
+
+Emits one row per (size, series): measured CPU ms + projected v5e ms +
+the projected speedup (the paper's Fig. 2 RIGHT).
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import row, timeit, tpu_projection
+from repro.core.shape_features import ShapeFeatureExtractor
+from repro.data.synthetic import make_case
+from repro.kernels import diameter as dk
+from repro.kernels import marching_cubes as mck
+from repro.kernels import ops
+
+# (label, image dims) spanning the paper's size range (small -> large)
+SIZES = [
+    ("tiny", (40, 36, 12)),
+    ("small", (52, 52, 64)),
+    ("medium", (128, 96, 80)),
+    ("large", (232, 104, 176)),
+]
+
+
+def run(repeat: int = 1, block: int = 256, variant: str = "seqacc"):
+    ext = ShapeFeatureExtractor(backend="ref")
+    rows = []
+    for label, dims in SIZES:
+        img, msk, sp = make_case(dims, seed=17)
+        feats, times = ext.execute(img, msk, sp, with_times=True)
+        n_verts = int(feats["_n_mesh_vertices"])
+        cap = ops.vertex_bucket(n_verts)
+        cpu_ms = times.mesh_ms + times.diameter_ms
+
+        mc_t = tpu_projection(
+            mck.flop_estimate(dims), 4.0 * float(np.prod(dims)) * 1.35
+        )
+        d_t = tpu_projection(
+            dk.flop_estimate(cap, block, variant),
+            dk.bytes_estimate(cap, block, variant),
+        )
+        tpu_ms = (mc_t + d_t) * 1e3
+        rows.append(
+            row(
+                f"fig2/{label}",
+                times.total_ms * 1e3,
+                dims="x".join(map(str, dims)),
+                vertices=n_verts,
+                cpu_compute_ms=f"{cpu_ms:.1f}",
+                v5e_proj_ms=f"{tpu_ms:.3f}",
+                proj_speedup=f"{cpu_ms / max(tpu_ms, 1e-9):.0f}",
+            )
+        )
+    return rows
+
+
+def main(argv=None):
+    argparse.ArgumentParser().parse_args(argv)
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Aggregate experiments/dryrun/*.json into the §Roofline table.
+
+One row per (arch, shape, mesh) dry-run cell: the three roofline terms,
+the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs usefulness ratio, and the
+roofline fraction.  This is the report the perf loop iterates on.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from benchmarks.common import row
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_cells(mesh: str | None = None):
+    cells = []
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        d = json.loads(p.read_text())
+        if mesh and d.get("mesh") not in (mesh, None):
+            continue
+        cells.append(d)
+    return cells
+
+
+def run(mesh: str | None = None):
+    rows = []
+    for d in load_cells(mesh):
+        name = f"roofline/{d['arch']}/{d['shape']}/{d.get('mesh', '?')}"
+        if d.get("skipped"):
+            rows.append(row(name, 0.0, status="skipped"))
+            continue
+        if d.get("status") != "ok":
+            rows.append(row(name, 0.0, status="FAILED"))
+            continue
+        r = d["roofline"]
+        m = d.get("memory", {})
+        bound_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        rows.append(
+            row(
+                name,
+                bound_s * 1e6,  # bound step time (us) = the 'call'
+                dominant=r["dominant"].replace("_s", ""),
+                compute_s=f"{r['compute_s']:.3e}",
+                memory_s=f"{r['memory_s']:.3e}",
+                collective_s=f"{r['collective_s']:.3e}",
+                roofline_frac=f"{r.get('roofline_fraction', 0):.3f}",
+                useful_flops=f"{r.get('useful_flops_ratio', 0):.3f}",
+                hbm_gib=f"{(m.get('argument_size_in_bytes', 0) + m.get('temp_size_in_bytes', 0)) / 2**30:.2f}",
+            )
+        )
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args(argv)
+    for r in run(args.mesh):
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

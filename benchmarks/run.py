@@ -1,0 +1,60 @@
+"""Benchmark harness entry point: ``python -m benchmarks.run``.
+
+One benchmark per paper table/figure (+ the roofline report):
+
+    table2   -- per-case stage breakdown            (paper Table 2)
+    fig1     -- diameter kernel variant comparison  (paper Fig. 1)
+    fig2     -- size scaling + projected speedup    (paper Fig. 2)
+    pipeline -- batched multi-case throughput       (paper §3 workflow)
+    roofline -- dry-run roofline table              (EXPERIMENTS §Roofline)
+
+Prints ``name,us_per_call,derived`` CSV.  Select suites with --only.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SUITES = ("table2", "fig1", "fig2", "pipeline", "roofline")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", choices=SUITES, default=list(SUITES))
+    ap.add_argument("--full", action="store_true",
+                    help="table2: run all 20 cases incl. the O(M^2) giants")
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for suite in args.only:
+        t0 = time.time()
+        try:
+            if suite == "table2":
+                from benchmarks import table2_breakdown
+                rows = table2_breakdown.run(full=args.full)
+            elif suite == "fig1":
+                from benchmarks import fig1_variants
+                rows = fig1_variants.run()
+            elif suite == "fig2":
+                from benchmarks import fig2_scaling
+                rows = fig2_scaling.run()
+            elif suite == "pipeline":
+                from benchmarks import pipeline_throughput
+                rows = pipeline_throughput.run()
+            else:
+                from benchmarks import roofline_report
+                rows = roofline_report.run()
+        except Exception as e:  # pragma: no cover
+            print(f"{suite}/ERROR,0,{type(e).__name__}: {e}", file=sys.stderr)
+            failures += 1
+            continue
+        for r in rows:
+            print(r)
+        print(f"# {suite} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

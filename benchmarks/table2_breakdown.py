@@ -1,0 +1,88 @@
+"""Paper Table 2 analogue: per-case stage breakdown of shape extraction.
+
+For each synthetic KITS19-dimensioned case (same image dims as the paper's
+Table 2) we measure wall-clock per stage on the reference CPU path (the
+'PyRadiomics on CPU' role in this CPU-only container) and report:
+
+  * preprocess / transfer / marching-cubes / diameter milliseconds,
+  * the diameter share of compute time (paper: 95.7%..99.9%),
+  * a TPU-v5e roofline projection of the accelerated stages (the
+    'PyRadiomics-cuda time' column we cannot wall-clock without hardware)
+    and the implied computation speedup (paper: 3.9x..18.2x on RTX4070).
+
+Cases above ``max_vertices`` are skipped by default (O(M^2) on a container
+CPU); pass --full to run all 20.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import V5E, row, tpu_projection
+from repro.core.shape_features import ShapeFeatureExtractor
+from repro.data.synthetic import table2_suite
+from repro.kernels import diameter as diam_k
+from repro.kernels import marching_cubes as mc_k
+from repro.kernels import ops
+
+
+def project_tpu_ms(mask_shape, n_verts, diam_block=256, variant="seqacc"):
+    """Roofline projection (ms) of the two accelerated stages on one v5e."""
+    mc_fl = mc_k.flop_estimate(mask_shape)
+    mc_by = 4.0 * float(np.prod(mask_shape)) * 1.35  # brick halo overhead
+    t_mc = tpu_projection(mc_fl, mc_by, unit="mxu_f32")  # one-hot matmuls
+    cap = ops.vertex_bucket(n_verts)
+    d_fl = diam_k.flop_estimate(cap, diam_block, variant)
+    d_by = diam_k.bytes_estimate(cap, diam_block, variant)
+    t_d = tpu_projection(d_fl, d_by, unit="vpu")  # elementwise pair sweep
+    return t_mc * 1e3, t_d * 1e3
+
+
+def run(full: bool = False, max_vertices: int = 25_000, repeat: int = 1):
+    ext = ShapeFeatureExtractor(backend="ref")
+    rows = []
+    for name, img, msk, sp in table2_suite():
+        # cheap vertex count FIRST (one elementwise pass) so the O(M^2)
+        # monsters are skipped before any diameter work
+        from repro.core.shape_features import crop_to_roi
+
+        _, m_roi, _ = crop_to_roi(img, msk)
+        n_est = int(ops.count_vertices(ops.vertex_fields(m_roi, 0.5, sp)))
+        if not full and n_est > max_vertices:
+            continue
+        feats, times = ext.execute(img, msk, sp, with_times=True)
+        n_verts = int(feats["_n_mesh_vertices"])
+        comp_ms = times.mesh_ms + times.diameter_ms
+        diam_frac = times.diameter_ms / comp_ms if comp_ms > 0 else 0.0
+        mc_tpu_ms, d_tpu_ms = project_tpu_ms(msk.shape, n_verts)
+        transfer_tpu_ms = 4.0 * msk.size / V5E["pcie_bw"] * 1e3
+        tpu_total = mc_tpu_ms + d_tpu_ms + transfer_tpu_ms
+        comp_speedup = comp_ms / max(1e-9, mc_tpu_ms + d_tpu_ms)
+        rows.append(
+            row(
+                f"table2/{name}",
+                times.total_ms * 1e3,  # us
+                vertices=n_verts,
+                prep_ms=f"{times.preprocess_ms:.1f}",
+                mc_ms=f"{times.mesh_ms:.1f}",
+                diam_ms=f"{times.diameter_ms:.1f}",
+                diam_frac=f"{diam_frac:.4f}",
+                tpu_proj_ms=f"{tpu_total:.3f}",
+                comp_speedup_proj=f"{comp_speedup:.1f}",
+                mesh_volume=f"{feats['MeshVolume']:.1f}",
+            )
+        )
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    for r in run(full=args.full):
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

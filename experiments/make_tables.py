@@ -1,0 +1,51 @@
+"""Regenerate the EXPERIMENTS.md roofline tables from dryrun JSONs.
+
+Usage: python experiments/make_tables.py [--mesh single|multi]
+Prints GitHub-flavoured markdown.
+"""
+import argparse
+import json
+from pathlib import Path
+
+DIR = Path(__file__).resolve().parent / "dryrun"
+
+
+def fmt(mesh: str, dir=None):
+    global DIR
+    if dir is not None:
+        DIR = Path(dir)
+    print(f"\n#### Mesh: {mesh}\n")
+    print("| arch | shape | dominant | compute (s) | memory (s) | collective (s) "
+          "| roofline frac | useful FLOPs | HBM GiB/dev | note |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for p in sorted(DIR.glob(f"*__{mesh}.json")):
+        d = json.loads(p.read_text())
+        arch, shape = d["arch"], d["shape"]
+        if d.get("skipped"):
+            print(f"| {arch} | {shape} | — | — | — | — | — | — | — | "
+                  f"skipped: sub-quadratic-only shape |")
+            continue
+        if d.get("status") != "ok":
+            print(f"| {arch} | {shape} | FAIL | | | | | | | {d.get('error','')[:60]} |")
+            continue
+        r = d["roofline"]
+        m = d.get("memory", {})
+        hbm = (m.get("argument_size_in_bytes", 0) + m.get("temp_size_in_bytes", 0)) / 2**30
+        note = "OVER-HBM" if hbm > 16 else ""
+        print(
+            f"| {arch} | {shape} | {r['dominant'].replace('_s','')} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} | {r['collective_s']:.3e} "
+            f"| {r.get('roofline_fraction', 0):.2f} | {r.get('useful_flops_ratio', 0):.2f} "
+            f"| {hbm:.1f} | {note} |"
+        )
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None, choices=["single", "multi"])
+    ap.add_argument("--dir", default=None,
+                    help="JSON dir (default experiments/dryrun; use "
+                         "experiments/dryrun_baseline for the paper-faithful table)")
+    a = ap.parse_args()
+    for mesh in ([a.mesh] if a.mesh else ["single", "multi"]):
+        fmt(mesh, dir=a.dir)

@@ -1,0 +1,3 @@
+"""Architecture + shape configs.  ``registry.get_config('<arch>')`` resolves
+the 10 assigned architectures; ``shapes.SHAPES`` the 4 assigned input
+shapes."""

@@ -1,0 +1,21 @@
+"""Core: the paper's contribution -- accelerated 3D shape feature extraction.
+
+Public API:
+    ShapeFeatureExtractor   -- PyRadiomics-compatible single-case extractor
+    BatchedExtractor        -- multi-case, mesh-sharded pipeline
+    resolve_backend         -- accelerator probe / CPU fallback (dispatcher)
+"""
+from repro.core.dispatcher import resolve_backend, has_tpu
+from repro.core.shape_features import ShapeFeatureExtractor, StageTimes, crop_to_roi
+from repro.core.pipeline import BatchedExtractor, Bucket, assign_bucket
+
+__all__ = [
+    "ShapeFeatureExtractor",
+    "StageTimes",
+    "BatchedExtractor",
+    "Bucket",
+    "assign_bucket",
+    "crop_to_roi",
+    "resolve_backend",
+    "has_tpu",
+]

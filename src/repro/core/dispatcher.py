@@ -1,0 +1,53 @@
+"""Backend dispatch: the TPU analogue of PyRadiomics-cuda's GPU probe.
+
+The paper's C extension replaces one call site with a dispatcher that
+queries for a CUDA device at runtime and falls back to the original CPU
+implementation when none is found (or the driver fails).  Here:
+
+    'pallas'    -- compiled Pallas TPU kernels (requires a TPU backend)
+    'interpret' -- the same kernels executed in Pallas interpret mode
+                   (Python/CPU; used for validation in this container)
+    'ref'       -- the pure-jnp reference path (the 'original CPU
+                   implementation' role)
+    'auto'      -- probe: TPU present -> 'pallas', else 'ref'
+
+``REPRO_BACKEND`` overrides 'auto' (like CUDA_VISIBLE_DEVICES-style control).
+Every backend returns identical features (tested), so switching is
+transparent to callers -- the paper's key compatibility property.
+"""
+from __future__ import annotations
+
+import os
+from typing import Literal
+
+import jax
+
+Backend = Literal["auto", "pallas", "interpret", "ref"]
+_VALID = ("auto", "pallas", "interpret", "ref")
+
+
+def has_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except RuntimeError:  # pragma: no cover - no backend at all
+        return False
+
+
+def resolve_backend(backend: Backend | None = None) -> str:
+    """Resolve 'auto' to a concrete backend, honouring REPRO_BACKEND."""
+    if backend is None:
+        backend = os.environ.get("REPRO_BACKEND", "auto")  # type: ignore
+    if backend not in _VALID:
+        raise ValueError(f"backend must be one of {_VALID}, got {backend!r}")
+    if backend != "auto":
+        return backend
+    return "pallas" if has_tpu() else "ref"
+
+
+def kernel_kwargs(backend: str) -> dict:
+    """kwargs forwarded to the Pallas wrappers for a resolved backend."""
+    if backend == "pallas":
+        return {"interpret": False}
+    if backend == "interpret":
+        return {"interpret": True}
+    raise ValueError(f"not a kernel backend: {backend!r}")

@@ -1,0 +1,1 @@
+"""Data substrate: synthetic CT volumes, minimal NIfTI IO, token pipelines."""

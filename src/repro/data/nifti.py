@@ -1,0 +1,74 @@
+"""Minimal NIfTI-1 reader/writer (pure numpy + stdlib gzip).
+
+Supports the subset PyRadiomics workflows need: single-file ``.nii`` /
+``.nii.gz``, scalar volumes, little-endian, dtypes {uint8, int16, int32,
+float32, float64}, pixdim spacing.  Enough to round-trip the synthetic
+KITS19-like suite and to ingest real segmentation masks.
+"""
+from __future__ import annotations
+
+import gzip
+import struct
+from pathlib import Path
+
+import numpy as np
+
+_DTYPES = {2: np.uint8, 4: np.int16, 8: np.int32, 16: np.float32, 64: np.float64}
+_CODES = {np.dtype(v): k for k, v in _DTYPES.items()}
+
+
+def read_nifti(path):
+    """Returns (data (x,y,z) ndarray, spacing (3,) float32)."""
+    path = Path(path)
+    raw = path.read_bytes()
+    if path.suffix == ".gz" or raw[:2] == b"\x1f\x8b":
+        raw = gzip.decompress(raw)
+    if len(raw) < 352:
+        raise ValueError("not a NIfTI-1 file (too short)")
+    sizeof_hdr = struct.unpack_from("<i", raw, 0)[0]
+    if sizeof_hdr != 348:
+        raise ValueError(f"unsupported NIfTI header size {sizeof_hdr}")
+    dim = struct.unpack_from("<8h", raw, 40)
+    ndim = dim[0]
+    if not 1 <= ndim <= 3:
+        raise ValueError(f"only 1-3D volumes supported, got dim={dim}")
+    shape = tuple(int(d) for d in dim[1 : 1 + ndim])
+    datatype = struct.unpack_from("<h", raw, 70)[0]
+    if datatype not in _DTYPES:
+        raise ValueError(f"unsupported datatype code {datatype}")
+    pixdim = struct.unpack_from("<8f", raw, 76)
+    vox_offset = int(struct.unpack_from("<f", raw, 108)[0])
+    magic = raw[344:348]
+    if magic not in (b"n+1\x00", b"ni1\x00"):
+        raise ValueError(f"bad NIfTI magic {magic!r}")
+    dt = np.dtype(_DTYPES[datatype]).newbyteorder("<")
+    count = int(np.prod(shape))
+    data = np.frombuffer(raw, dt, count=count, offset=vox_offset or 352)
+    # NIfTI stores Fortran order (x fastest)
+    data = data.reshape(shape, order="F")
+    spacing = np.asarray(pixdim[1 : 1 + max(3, ndim)][:3], np.float32)
+    spacing[spacing == 0] = 1.0
+    return np.ascontiguousarray(data), spacing
+
+
+def write_nifti(path, data: np.ndarray, spacing=(1.0, 1.0, 1.0)):
+    path = Path(path)
+    data = np.asarray(data)
+    if data.dtype not in _CODES:
+        data = data.astype(np.float32)
+    hdr = bytearray(352)
+    struct.pack_into("<i", hdr, 0, 348)
+    dim = [data.ndim] + list(data.shape) + [1] * (7 - data.ndim)
+    struct.pack_into("<8h", hdr, 40, *dim)
+    struct.pack_into("<h", hdr, 70, _CODES[np.dtype(data.dtype)])
+    struct.pack_into("<h", hdr, 72, data.dtype.itemsize * 8)
+    pix = [0.0] + list(np.asarray(spacing, np.float32)) + [0.0] * (7 - 3)
+    struct.pack_into("<8f", hdr, 76, *pix)
+    struct.pack_into("<f", hdr, 108, 352.0)
+    hdr[344:348] = b"n+1\x00"
+    payload = bytes(hdr) + np.asfortranarray(data).tobytes(order="F")
+    if str(path).endswith(".gz"):
+        path.write_bytes(gzip.compress(payload, compresslevel=1))
+    else:
+        path.write_bytes(payload)
+    return path

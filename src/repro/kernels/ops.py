@@ -1,0 +1,65 @@
+"""Jitted, backend-dispatched wrappers around the shape-feature kernels.
+
+Public entry points used by ``repro.core`` -- each takes a ``backend``
+keyword resolved by ``repro.core.dispatcher`` and routes to the Pallas TPU
+kernel, its interpret-mode twin, or the pure-jnp reference path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dispatcher
+from repro.kernels import diameter as _diam
+from repro.kernels import marching_cubes as _mc
+from repro.kernels import ref as _ref
+
+
+def mc_volume_area(vol, iso=0.5, spacing=(1.0, 1.0, 1.0), *, backend=None, **kw):
+    """(mesh_volume, surface_area) of the isosurface of ``vol``."""
+    b = dispatcher.resolve_backend(backend)
+    if b == "ref":
+        return _ref.mc_volume_area(vol, iso, spacing, chunk_z=kw.get("chunk_z", 32))
+    return _mc.mc_volume_area_pallas(
+        vol,
+        iso,
+        spacing,
+        block=kw.get("block", (8, 8, 8)),
+        chunk=kw.get("chunk", 512),
+        **dispatcher.kernel_kwargs(b),
+    )
+
+
+def max_diameters(verts, mask, *, backend=None, **kw):
+    """(4,) [3D, Slice(xy), Row(xz), Column(yz)] max diameters."""
+    b = dispatcher.resolve_backend(backend)
+    if b == "ref":
+        return _ref.max_diameters(verts, mask, row_block=kw.get("row_block", 128))
+    return _diam.max_diameters_pallas(
+        verts,
+        mask,
+        block=kw.get("block", 256),
+        variant=kw.get("variant", "seqacc"),
+        **dispatcher.kernel_kwargs(b),
+    )
+
+
+def vertex_fields(vol, iso=0.5, spacing=(1.0, 1.0, 1.0), origin=(0.0, 0.0, 0.0)):
+    """Dense dedup vertex fields (elementwise; same path on all backends)."""
+    return _ref.vertex_fields(vol, iso, spacing, origin)
+
+
+def count_vertices(fields):
+    return _ref.count_vertices(fields)
+
+
+def compact_vertices(fields, max_vertices):
+    return _ref.compact_vertices(fields, max_vertices)
+
+
+def vertex_bucket(n: int, minimum: int = 512) -> int:
+    """Static padding cap for a vertex count (limits recompilation)."""
+    b = minimum
+    while b < n:
+        b *= 2
+    return b

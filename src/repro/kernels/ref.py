@@ -1,0 +1,261 @@
+"""Pure-jnp reference oracles for the two PyRadiomics-cuda hot spots.
+
+These are the numerical ground truth the Pallas kernels are validated against
+(``tests/test_kernels_*``) and the CPU fallback path of the dispatcher -- the
+role the original C implementation plays in PyRadiomics-cuda.
+
+Conventions
+-----------
+* volumes are ``(nx, ny, nz)`` float arrays; a voxel is *inside* iff
+  ``value > iso`` (binary masks with ``iso=0.5``, as PyRadiomics uses).
+* ``spacing``/``origin`` map index space to physical space:
+  ``pos_phys = origin + index * spacing``.
+* mesh vertices are deduplicated by construction: every *grid edge* owns at
+  most one vertex, stored in three dense per-axis fields (VX, VY, VZ).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mc_tables as mct
+
+_TRI_TABLE = jnp.asarray(mct.TRI_TABLE)  # (256, 15) int32, -1 padded
+_NSLOTS = mct.MAX_TRIS * 3
+
+
+class VertexFields(NamedTuple):
+    """Dense per-axis vertex fields (the TPU-native 'triangle append')."""
+
+    vx: jax.Array  # (nx-1, ny, nz, 3) positions on x-directed edges
+    vy: jax.Array  # (nx, ny-1, nz, 3)
+    vz: jax.Array  # (nx, ny, nz-1, 3)
+    ax: jax.Array  # (nx-1, ny, nz) bool, edge active
+    ay: jax.Array
+    az: jax.Array
+
+
+def _interp(v0, v1, iso):
+    """Interpolation parameter of the iso crossing along an edge."""
+    denom = v1 - v0
+    safe = jnp.where(jnp.abs(denom) < 1e-30, 1.0, denom)
+    t = (iso - v0) / safe
+    return jnp.clip(t, 0.0, 1.0)
+
+
+def vertex_fields(vol, iso=0.5, spacing=(1.0, 1.0, 1.0), origin=(0.0, 0.0, 0.0)):
+    """Compute the deduplicated mesh-vertex fields (pure elementwise pass)."""
+    vol = jnp.asarray(vol, jnp.float32)
+    sp = jnp.asarray(spacing, jnp.float32)
+    og = jnp.asarray(origin, jnp.float32)
+    nx, ny, nz = vol.shape
+    inside = vol > iso
+
+    def axis_field(axis, n_axis):
+        sl0 = [slice(None)] * 3
+        sl1 = [slice(None)] * 3
+        sl0[axis] = slice(0, -1)
+        sl1[axis] = slice(1, None)
+        v0, v1 = vol[tuple(sl0)], vol[tuple(sl1)]
+        act = inside[tuple(sl0)] != inside[tuple(sl1)]
+        t = _interp(v0, v1, iso)
+        shape = v0.shape
+        ii, jj, kk = jnp.meshgrid(
+            jnp.arange(shape[0], dtype=jnp.float32),
+            jnp.arange(shape[1], dtype=jnp.float32),
+            jnp.arange(shape[2], dtype=jnp.float32),
+            indexing="ij",
+        )
+        idx = [ii, jj, kk]
+        idx[axis] = idx[axis] + t
+        pos = jnp.stack(idx, axis=-1) * sp + og
+        return pos, act
+
+    vx, ax = axis_field(0, nx)
+    vy, ay = axis_field(1, ny)
+    vz, az = axis_field(2, nz)
+    return VertexFields(vx, vy, vz, ax, ay, az)
+
+
+def _cell_cube_index(vol, iso):
+    """(nx-1,ny-1,nz-1) int32 MC case index per cell."""
+    inside = (vol > iso).astype(jnp.int32)
+    idx = 0
+    for c, (dx, dy, dz) in enumerate(np.asarray(mct.CORNERS)):
+        sl = (
+            slice(dx, dx + vol.shape[0] - 1),
+            slice(dy, dy + vol.shape[1] - 1),
+            slice(dz, dz + vol.shape[2] - 1),
+        )
+        idx = idx + (inside[sl] << c)
+    return idx
+
+
+def _cell_edge_positions(f: VertexFields):
+    """Stack the 12 per-cell edge-vertex positions from the dense fields.
+
+    Returns (cx, cy, cz, 12, 3).  Pure slicing -- no dynamic gather.
+    """
+    vx, vy, vz = f.vx, f.vy, f.vz
+    e = [None] * 12
+    e[0] = vx[:, :-1, :-1]
+    e[2] = vx[:, 1:, :-1]
+    e[4] = vx[:, :-1, 1:]
+    e[6] = vx[:, 1:, 1:]
+    e[3] = vy[:-1, :, :-1]
+    e[1] = vy[1:, :, :-1]
+    e[7] = vy[:-1, :, 1:]
+    e[5] = vy[1:, :, 1:]
+    e[8] = vz[:-1, :-1, :]
+    e[9] = vz[1:, :-1, :]
+    e[10] = vz[1:, 1:, :]
+    e[11] = vz[:-1, 1:, :]
+    return jnp.stack(e, axis=-2)
+
+
+def _slab_volume_area(slab, iso, spacing, origin):
+    """Signed mesh volume + surface area for the cells of one volume slab."""
+    f = vertex_fields(slab, iso, spacing, origin)
+    e = _cell_edge_positions(f)  # (cx,cy,cz,12,3)
+    idx = _cell_cube_index(slab, iso)  # (cx,cy,cz)
+    tids = _TRI_TABLE[idx]  # (cx,cy,cz,15) via jnp.take - oracle only
+    safe = jnp.maximum(tids, 0)
+    verts = jnp.take_along_axis(e, safe[..., None], axis=-2)
+    # verts: (cx,cy,cz,15,3); group into triangles
+    tri = verts.reshape(*verts.shape[:-2], mct.MAX_TRIS, 3, 3)
+    valid = (tids.reshape(*tids.shape[:-1], mct.MAX_TRIS, 3)[..., 0] >= 0).astype(
+        jnp.float32
+    )
+    a, b, c = tri[..., 0, :], tri[..., 1, :], tri[..., 2, :]
+    cr = jnp.cross(b - a, c - a)
+    area = 0.5 * jnp.linalg.norm(cr, axis=-1) * valid
+    svol = jnp.einsum("...d,...d->...", a, jnp.cross(b, c)) / 6.0 * valid
+    return jnp.sum(svol), jnp.sum(area)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_z",))
+def _mc_volume_area_jit(vol, iso, spacing, origin, chunk_z):
+    nz = vol.shape[2]
+    n_cells_z = nz - 1
+    cz = min(chunk_z, n_cells_z)
+    n_slabs = -(-n_cells_z // cz)
+    pad_z = n_slabs * cz + 1 - nz
+    volp = jnp.pad(vol, ((0, 0), (0, 0), (0, pad_z)), constant_values=0.0)
+
+    def body(carry, k):
+        sv, sa = carry
+        slab = jax.lax.dynamic_slice_in_dim(volp, k * cz, cz + 1, axis=2)
+        og = jnp.asarray(origin, jnp.float32).at[2].add(
+            k * cz * jnp.asarray(spacing, jnp.float32)[2]
+        )
+        dv, da = _slab_volume_area(slab, iso, spacing, og)
+        return (sv + dv, sa + da), None
+
+    (sv, sa), _ = jax.lax.scan(body, (0.0, 0.0), jnp.arange(n_slabs))
+    return jnp.abs(sv), sa
+
+
+def mc_volume_area(vol, iso=0.5, spacing=(1.0, 1.0, 1.0), origin=(0.0, 0.0, 0.0), chunk_z=32):
+    """Mesh volume and surface area of the iso-surface (reference path).
+
+    Pads nothing: callers pad masks by one voxel (as PyRadiomics does) so the
+    surface closes.  Volume is the absolute signed-tetrahedron sum; with the
+    outward-oriented table the sign is positive already.
+    """
+    vol = jnp.asarray(vol, jnp.float32)
+    iso = jnp.float32(iso)
+    spacing = jnp.asarray(spacing, jnp.float32)
+    origin = jnp.asarray(origin, jnp.float32)
+    return _mc_volume_area_jit(vol, iso, spacing, origin, chunk_z)
+
+
+# ---------------------------------------------------------------------------
+# Vertex compaction: dense per-edge fields -> padded (M,3) vertex list
+# ---------------------------------------------------------------------------
+
+def compact_vertices(f: VertexFields, max_vertices: int):
+    """Gather active-edge vertices into a padded (max_vertices, 3) array.
+
+    Returns (verts, mask, n_active).  Deterministic order (x-field, y-field,
+    z-field, row-major).  If there are more active vertices than
+    ``max_vertices`` the excess is dropped (callers size the cap from
+    ``count_vertices``).
+    """
+    pos = jnp.concatenate([f.vx.reshape(-1, 3), f.vy.reshape(-1, 3), f.vz.reshape(-1, 3)])
+    act = jnp.concatenate([f.ax.reshape(-1), f.ay.reshape(-1), f.az.reshape(-1)])
+    n = jnp.sum(act.astype(jnp.int32))
+    # stable order: active first, original order preserved among actives
+    order = jnp.argsort(~act, stable=True)[:max_vertices]
+    verts = pos[order]
+    mask = act[order]
+    return verts, mask, n
+
+
+def count_vertices(f: VertexFields):
+    return (
+        jnp.sum(f.ax.astype(jnp.int32))
+        + jnp.sum(f.ay.astype(jnp.int32))
+        + jnp.sum(f.az.astype(jnp.int32))
+    )
+
+
+# ---------------------------------------------------------------------------
+# Diameters: max pairwise distances (3D + three coordinate-plane projections)
+# ---------------------------------------------------------------------------
+
+NEG = jnp.float32(-1e30)
+
+
+@functools.partial(jax.jit, static_argnames=("row_block",))
+def max_diameters_sq(verts, mask, row_block=128):
+    """Maximum squared pairwise distances over valid vertex pairs.
+
+    Returns (4,) float32: [3D, xy-plane, xz-plane, yz-plane] squared maxima.
+    Blocked over rows so memory is O(row_block * M).
+
+    Masking trick (big CPU speedup): every *invalid* vertex is replaced by
+    the first valid vertex before the pair sweep.  A duplicated point can
+    never increase the maximum pairwise distance, so the sweep needs no
+    per-pair mask/where at all -- the inner loop is pure sub/mul/add/max,
+    SoA over axes, which XLA fuses into one vectorised pass.
+    """
+    verts = jnp.asarray(verts, jnp.float32)
+    m = jnp.asarray(mask).astype(bool)
+    M = verts.shape[0]
+    R = min(row_block, M)
+    nb = -(-M // R)
+    pad = nb * R - M
+
+    v0 = verts[jnp.argmax(m)]  # first valid vertex (callers reject empty)
+    vfill = jnp.where(m[:, None], verts, v0[None, :])
+    # centre to keep f32 magnitudes small (cancellation control)
+    centre = 0.5 * (jnp.min(vfill, axis=0) + jnp.max(vfill, axis=0))
+    vfill = vfill - centre
+    # pad rows duplicate the last vertex -- duplicates cannot raise the max
+    vp = jnp.pad(vfill, ((0, pad), (0, 0)), mode="edge") if pad else vfill
+    cx, cy, cz = vp[:, 0], vp[:, 1], vp[:, 2]  # SoA (M,)
+
+    def body(best, i):
+        rows = jax.lax.dynamic_slice_in_dim(vp, i * R, R, axis=0)
+        dx = rows[:, 0][:, None] - cx[None, :]
+        dy = rows[:, 1][:, None] - cy[None, :]
+        dz = rows[:, 2][:, None] - cz[None, :]
+        qx, qy, qz = dx * dx, dy * dy, dz * dz
+        qxy = qx + qy
+        m3 = jnp.max(qxy + qz)
+        mxy = jnp.max(qxy)
+        mxz = jnp.max(qx + qz)
+        myz = jnp.max(qy + qz)
+        return jnp.maximum(best, jnp.stack([m3, mxy, mxz, myz])), None
+
+    best, _ = jax.lax.scan(body, jnp.full((4,), NEG), jnp.arange(nb))
+    return jnp.maximum(best, 0.0)
+
+
+def max_diameters(verts, mask, row_block=128):
+    """(4,) float32 diameters: [max 3D, xy(Slice), xz(Row), yz(Column)]."""
+    return jnp.sqrt(max_diameters_sq(verts, mask, row_block=row_block))

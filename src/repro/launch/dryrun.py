@@ -1,0 +1,422 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the scale proof: ``.lower().compile()`` must succeed for the
+single-pod (16,16) and multi-pod (2,16,16) production meshes for all 40
+assigned cells, with explicit shardings end to end.  The compiled artifact
+feeds the roofline analysis (EXPERIMENTS.md §Roofline).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+# The force-host-device flag MUST precede any jax device initialisation.
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs.base import RunConfig  # noqa: E402
+from repro.configs.shapes import SHAPES  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.encdec import EncDec, enc_len_for  # noqa: E402
+from repro.models.registry import ARCHS, get_config, get_model  # noqa: E402
+from repro.parallel import sharding as shd  # noqa: E402
+from repro.serve.serve_step import make_prefill_fn, make_serve_step  # noqa: E402
+from repro.train import optimizer as opt  # noqa: E402
+from repro.train.train_step import make_train_step  # noqa: E402
+from repro.utils import roofline  # noqa: E402
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def skip_reason(arch: str, shape_name: str) -> str | None:
+    """Cells excluded by the assignment rules."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return (
+            "long_500k requires sub-quadratic attention; "
+            f"{arch} is full-attention (see DESIGN.md §Arch-applicability)"
+        )
+    return None
+
+
+def _abstract(tree_fn, *args, **kw):
+    return jax.eval_shape(tree_fn, *args, **kw)
+
+
+def input_specs(cfg, shape, mesh, rules=None):
+    """ShapeDtypeStruct stand-ins + shardings for one cell's batch."""
+    b, s = shape.global_batch, shape.seq_len
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.family in ("audio", "encdec"):
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, enc_len_for(s), cfg.d_model), jnp.bfloat16
+        )
+    elif cfg.frontend_tokens:
+        specs["prefix"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16
+        )
+    # shape-aware: batch may not divide (e.g. B=1) -> pspec handles it
+    shardings = {
+        k: jax.sharding.NamedSharding(
+            mesh,
+            shd.pspec(("batch",) + (None,) * (len(v.shape) - 1),
+                      rules=rules, mesh=mesh, shape=v.shape),
+        )
+        for k, v in specs.items()
+    }
+    return specs, shardings
+
+
+# Per-arch run overrides driven by per-chip HBM accounting (16 GB v5e):
+#   * arctic-480b: f32 master + f32 moments = 22.5 GB/chip on one pod ->
+#     bf16 master + bf16 moments (11.3 GB); deeper grad accumulation keeps
+#     expert activations bounded.
+ARCH_RUN_OVERRIDES = {
+    # microbatch_multi: the multi-pod mesh has 32 batch-axis devices
+    # (pod*data); a microbatch whose global batch is smaller than that
+    # makes GSPMD pad/replicate samples (observed: arctic per-device FLOPs
+    # doubled at microbatch=16 on 2x16x16).  Keep per-micro batch >= the
+    # batch-axis size.
+    "arctic-480b": dict(microbatch=16, microbatch_multi=8,
+                        param_dtype="bfloat16", opt_dtype="bfloat16"),
+    "nemotron-4-15b": dict(microbatch=8),
+    "internvl2-26b": dict(microbatch=16, microbatch_multi=8),
+    # train activation temps exceeded 16 GiB at microbatch=4 (42/34 GiB):
+    # deeper accumulation keeps one microbatch's activations live
+    "minicpm-2b": dict(microbatch=16, microbatch_multi=8),
+    "hymba-1.5b": dict(microbatch=16, microbatch_multi=8),
+}
+
+
+def _build_cell(cfg, shape, mesh, rules=None, microbatch=4,
+                serve_bf16=True, force_microbatch=None):
+    """Assemble (fn, args, jit kwargs, model_flops) for one cell.
+
+    Train cells default to 4 gradient-accumulation microbatches so peak
+    activation memory stays within a v5e's 16 GB HBM (the accumulation scan
+    keeps only one microbatch's activations live).  Decode/prefill cells
+    serve in bf16 by default (§Perf/1 it.3); --baseline restores f32.
+    """
+    ov = ARCH_RUN_OVERRIDES.get(cfg.name, {})
+    microbatch = ov.get("microbatch", microbatch)
+    if "pod" in mesh.shape:
+        microbatch = ov.get("microbatch_multi", microbatch)
+    if force_microbatch is not None:
+        microbatch = force_microbatch
+    default_pdt = ("bfloat16" if serve_bf16 and shape.kind != "train"
+                   else "float32")
+    param_dtype = jnp.dtype(ov.get("param_dtype", default_pdt))
+    opt_dtype = jnp.dtype(ov.get("opt_dtype", "float32"))
+    model = get_model(cfg)
+    run = RunConfig(microbatch=microbatch,
+                    gather_weights_once=ov.get("gather_weights_once", False))
+    with shd.use_mesh(mesh, rules):
+        params_abs = model.abstract(param_dtype)
+        p_sh = shd.param_shardings(model.spec(), mesh, rules)
+        batch_abs, batch_sh = input_specs(cfg, shape, mesh, rules)
+
+        if shape.kind == "train":
+            opt_abs = _abstract(lambda p: opt.init_opt_state(p, opt_dtype),
+                                params_abs)
+            o_sh = opt.OptState(
+                jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+                p_sh, jax.tree.map(lambda x: x, p_sh),
+            )
+            fn = make_train_step(model, run)
+            args = (params_abs, opt_abs, batch_abs)
+            jit_kw = dict(
+                in_shardings=(p_sh, o_sh, batch_sh),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1),
+            )
+            tokens = shape.global_batch * shape.seq_len
+            mflops = roofline.model_flops_train(cfg, tokens)
+        elif shape.kind == "prefill":
+            fn = make_prefill_fn(model)
+            extra_keys = [k for k in batch_abs if k != "tokens"]
+            args = (params_abs, batch_abs["tokens"],
+                    *[batch_abs[k] for k in extra_keys])
+            in_sh = [batch_sh["tokens"]] + [batch_sh[k] for k in extra_keys]
+            jit_kw = dict(in_shardings=(p_sh, *in_sh))
+            tokens = shape.global_batch * shape.seq_len
+            mflops = roofline.model_flops_decode(cfg, tokens)
+        else:  # decode
+            b = shape.global_batch
+            cache_abs = _abstract(
+                lambda: model.init_cache(b, shape.seq_len, dtype=jnp.bfloat16)
+            )
+            c_sh = shd.tree_shardings(cache_abs, model.cache_axes(), mesh, rules)
+            fn = make_serve_step(model)
+            tok_abs = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+            tok_sh = jax.sharding.NamedSharding(
+                mesh, shd.pspec(("batch", None), rules=rules, mesh=mesh,
+                                shape=(b, 1)),
+            )
+            rng_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
+            args = (params_abs, cache_abs, tok_abs, rng_abs)
+            jit_kw = dict(in_shardings=(p_sh, c_sh, tok_sh, None),
+                          donate_argnums=(1,))
+            mflops = roofline.model_flops_decode(cfg, shape.global_batch)
+    return fn, args, jit_kw, mflops
+
+
+def _with_layers(cfg, n: int):
+    """Same arch at n *unrolled* layers (per-layer cost extrapolation).
+
+    Unrolling matters: a scanned stack lowers to the same while body at any
+    trip count, so XLA's body-once cost counting would make an L-diff
+    vacuous.  Unrolled 2- vs 3-layer programs contain genuinely distinct
+    per-layer ops (including each layer's FSDP all-gathers), so their diff
+    is one true layer.
+    """
+    kw = dict(n_layers=n, scan_layers=False)
+    if cfg.n_encoder_layers:
+        kw["n_encoder_layers"] = n
+    if cfg.global_attn_layers:
+        kw["global_attn_layers"] = (0,)
+    return dataclasses.replace(cfg, **kw)
+
+
+def _costs_at(cfg, shape, mesh, rules=None, force_microbatch=None) -> dict:
+    """(collective bytes, flops, bytes accessed) for a small-L variant."""
+    fn, args, jit_kw, _ = _build_cell(cfg, shape, mesh, rules,
+                                      force_microbatch=force_microbatch)
+    with shd.use_mesh(mesh, rules):
+        compiled = jax.jit(fn, **jit_kw).lower(*args).compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return {
+        "coll": roofline.collective_bytes(compiled.as_text())["total"],
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+    }
+
+
+def _train_microbatch(cfg, mesh, microbatch=4) -> int:
+    ov = ARCH_RUN_OVERRIDES.get(cfg.name, {})
+    mb = ov.get("microbatch", microbatch)
+    if "pod" in mesh.shape:
+        mb = ov.get("microbatch_multi", mb)
+    return mb
+
+
+def lower_cell(arch: str, shape_name: str, mesh, rules=None, compile_=True,
+               extrapolate_collectives=True, serve_bf16=True):
+    """Lower (and optionally compile) one cell.  Returns the report dict."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    fn, args, jit_kw, mflops = _build_cell(cfg, shape, mesh, rules,
+                                           serve_bf16=serve_bf16)
+    with shd.use_mesh(mesh, rules):
+        lowered = jax.jit(fn, **jit_kw).lower(*args)
+
+    report = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(str(v) for v in mesh.shape.values()),
+        "mesh_axes": dict(mesh.shape),
+        "kind": shape.kind,
+        "n_chips": n_chips,
+        "lower_s": round(time.time() - t0, 2),
+        "n_params": cfg.n_params,
+        "n_active_params": cfg.n_active_params,
+    }
+    if not compile_:
+        return report, lowered, None
+
+    t1 = time.time()
+    compiled = lowered.compile()
+    report["compile_s"] = round(time.time() - t1, 2)
+    hlo = compiled.as_text()
+
+    # loop-aware corrections (XLA counts while bodies once; see roofline.py)
+    with shd.use_mesh(mesh, rules):
+        fcorr, bcorr, detail = roofline.loop_corrections(fn, *args)
+
+    # exact per-layer collectives by diffing 2- vs 3-layer compiles of the
+    # same cell (covers the all-gathers/reduce-scatters inside the layer
+    # scan, which the single-body HLO count misses)
+    coll_override = None
+    bytes_override = None
+    uses_layer_scan = not (cfg.family == "hybrid" and shape.kind == "decode")
+    if extrapolate_collectives and uses_layer_scan and cfg.n_layers > 3:
+        a2 = _costs_at(_with_layers(cfg, 2), shape, mesh, rules)
+        a3 = _costs_at(_with_layers(cfg, 3), shape, mesh, rules)
+        L = cfg.n_layers
+        ext = lambda k: a2[k] + (L - 2) * max(0.0, a3[k] - a2[k])
+        coll_override = ext("coll")
+        # Per-layer HBM-byte extrapolation.  Inner (attention/SSM) scan
+        # bodies stay counted once, which matches TPU reality: a fused
+        # flash-style kernel streams KV/chunks through VMEM, touching HBM
+        # once per operand -- see DESIGN.md §Roofline-accounting.
+        bytes_override = ext("bytes")
+        report["layer_extrapolation"] = {
+            "at_2_layers": a2,
+            "at_3_layers": a3,
+            "collective_total": coll_override,
+            "bytes_total": bytes_override,
+            "flops_total_xla": ext("flops"),
+        }
+        # Gradient-accumulation correction: the microbatch scan body is
+        # counted ONCE by the HLO text parse, but weight gathers repeat
+        # every micro-iteration.  Split collectives into a per-token part
+        # A (microbatch-invariant) and a per-iteration part W by also
+        # compiling at microbatch=1:  C1 = A + W,  Cb = A/b + W
+        # => A = (C1-Cb)*b/(b-1), true total = A + b*W.
+        b = _train_microbatch(cfg, mesh)
+        if shape.kind == "train" and b > 1:
+            c1_2 = _costs_at(_with_layers(cfg, 2), shape, mesh, rules,
+                             force_microbatch=1)["coll"]
+            c1_3 = _costs_at(_with_layers(cfg, 3), shape, mesh, rules,
+                             force_microbatch=1)["coll"]
+            C1 = c1_2 + (L - 2) * max(0.0, c1_3 - c1_2)
+            Cb = coll_override
+            A = max(0.0, (C1 - Cb) * b / (b - 1))
+            W = max(0.0, C1 - A)
+            coll_override = A + b * W
+            report["layer_extrapolation"]["microbatch_correction"] = {
+                "microbatch": b, "coll_mb1": C1, "coll_body_once": Cb,
+                "per_token_bytes": A, "per_iteration_bytes": W,
+                "collective_total": coll_override,
+            }
+
+    tp = mesh.shape.get("model", 1)
+    dp = n_chips // tp
+    cache_shard = 1
+    if (rules or {}).get("cache_seq") == "model" and shape.kind == "decode":
+        cache_shard = tp
+    struct_bytes = roofline.structural_hbm_bytes(cfg, shape, n_chips, tp, dp,
+                                                 cache_shard=cache_shard)
+    report["roofline"] = roofline.cost_terms(
+        compiled, n_chips, model_flops=mflops, hlo_text=hlo,
+        flop_correction=fcorr, byte_correction=bcorr,
+        bytes_override=bytes_override,
+        collective_total_override=coll_override,
+        structural_bytes=struct_bytes,
+    )
+    report["roofline"].update(detail)
+    report["memory"] = roofline.memory_report(compiled)
+    return report, lowered, compiled
+
+
+# §Perf/1 serving rules: flash-decode cache layout + head_dim TP, and pure
+# TP for the weights ("embed": None disables FSDP -- decode re-reads the
+# same weights every step, so gathering them per step over 'data' was the
+# whole collective term: 14x on nemotron/internvl2).  arctic-480b keeps
+# FSDP: 960 GB of bf16 experts cannot replicate over the data axis.
+OPT_DECODE_RULES = {"cache_seq": "model", "head_dim": "model", "embed": None}
+FSDP_SERVE_ARCHS = {"arctic-480b"}
+
+
+def run_cell(arch, shape_name, mesh_kind, rules=None, suffix="",
+             serve_bf16=True):
+    reason = skip_reason(arch, shape_name)
+    name = f"{arch}__{shape_name}__{mesh_kind}{suffix}"
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    out_path = OUT_DIR / f"{name}.json"
+    if reason:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+               "skipped": reason}
+        out_path.write_text(json.dumps(rec, indent=2))
+        print(f"[skip] {name}: {reason}")
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    try:
+        report, _, _ = lower_cell(arch, shape_name, mesh, rules,
+                                  serve_bf16=serve_bf16)
+        report["status"] = "ok"
+    except Exception as e:  # pragma: no cover - failure reporting path
+        report = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                  "status": "FAILED", "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-4000:]}
+        print(f"[FAIL] {name}: {report['error']}")
+        out_path.write_text(json.dumps(report, indent=2))
+        return report
+    out_path.write_text(json.dumps(report, indent=2))
+    r = report.get("roofline", {})
+    m = report.get("memory", {})
+    print(
+        f"[ok] {name}: compile {report.get('compile_s', '?')}s "
+        f"dominant={r.get('dominant')} "
+        f"compute={r.get('compute_s', 0):.3e}s "
+        f"mem={r.get('memory_s', 0):.3e}s coll={r.get('collective_s', 0):.3e}s "
+        f"hbm_args={m.get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+        f"temp={m.get('temp_size_in_bytes', 0)/2**30:.2f}GiB"
+    )
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--baseline", action="store_true",
+                    help="paper-faithful pre-§Perf configuration: batch-only "
+                         "cache sharding, FSDP attn weights, f32 serving")
+    ap.add_argument("--cache-seq-shard", action="store_true",
+                    help="(kept for §Perf repro) same as the default opt "
+                         "rules: cache seq-sharded + head_dim TP")
+    ap.add_argument("--serve-bf16", action="store_true",
+                    help="(kept for §Perf repro) bf16 decode params for one "
+                         "arch — now the default; see --baseline")
+    ap.add_argument("--suffix", default="",
+                    help="output filename suffix (keeps baselines intact)")
+    args = ap.parse_args()
+
+    if args.serve_bf16:
+        ARCH_RUN_OVERRIDES.setdefault(args.arch, {})["param_dtype"] = "bfloat16"
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    # --all is a convenience for "no filters"; explicit --arch/--shape
+    # always narrow the sweep
+    archs = [args.arch] if args.arch else sorted(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+
+    n_fail = 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                # §Perf/1 optimized rules are the DECODE default (they
+                # regress train cells: head_dim TP conflicts with the
+                # kv-head layout inside blockwise attention); --baseline
+                # reverts to the paper-faithful batch-only cache sharding.
+                if args.cache_seq_shard and not args.baseline:
+                    rules = dict(OPT_DECODE_RULES)  # forced (Perf repro)
+                elif not args.baseline and SHAPES[shape_name].kind == "decode":
+                    rules = dict(OPT_DECODE_RULES)
+                else:
+                    rules = None
+                if rules is not None and arch in FSDP_SERVE_ARCHS:
+                    rules.pop("embed", None)  # keep FSDP weights
+                rec = run_cell(arch, shape_name, mesh_kind, rules=rules,
+                               suffix=args.suffix,
+                               serve_bf16=not args.baseline)
+                if rec.get("status") == "FAILED":
+                    n_fail += 1
+    print(f"done; {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production meshes.
+
+TPU v5e pods: single pod = 256 chips as (16, 16) = ('data', 'model');
+multi-pod = 2 pods = 512 chips as (2, 16, 16) = ('pod', 'data', 'model')
+with DCN/ICI over the 'pod' axis.  Functions (not module constants) so that
+importing this module never touches jax device state -- the dry-run sets
+``xla_force_host_platform_device_count`` before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1) -> Mesh:
+    """Mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"))
+
+
+HW = {
+    # TPU v5e per-chip constants used by the roofline analysis
+    "peak_flops_bf16": 197e12,  # FLOP/s
+    "hbm_bw": 819e9,  # B/s
+    "ici_bw": 50e9,  # B/s per link
+}

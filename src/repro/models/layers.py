@@ -1,0 +1,296 @@
+"""Shared transformer layers: norms, RoPE, GQA attention, MLP variants.
+
+Attention uses a blockwise online-softmax formulation (flash-attention
+style, pure ``lax.scan`` over key blocks) so 32k-token prefill never
+materialises a full (S, S) score matrix.  Sliding-window and causal masking
+are fused into the block iteration: fully-masked key blocks still stream by
+(static grid) but their compute is trivially skipped by the mask add.
+
+Shapes follow (batch, seq, heads, head_dim).  Logical axes used for
+sharding: 'batch', 'seq', 'heads', 'kv_heads', 'head_dim', 'embed', 'mlp',
+'vocab', 'layers', 'expert'.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.params import P
+
+NEG_INF = -1e30
+
+
+def scan_or_unroll(body_fn, carry, xs, length: int, scan: bool):
+    """lax.scan when ``scan`` else a python unroll (used by the dry-run's
+    per-layer cost extrapolation, where distinct per-layer HLO is needed)."""
+    if scan:
+        return jax.lax.scan(body_fn, carry, xs)
+    ys = []
+    for i in range(length):
+        xsi = jax.tree.map(lambda x: x[i], xs) if xs is not None else None
+        carry, y = body_fn(carry, xsi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def rmsnorm_spec(d):
+    return {"scale": P((d,), ("embed",), "ones")}
+
+
+def rmsnorm(params, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def head_rmsnorm(x, scale, eps=1e-5):
+    """Per-head qk-norm (qwen3): normalise over head_dim."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope(x, positions, theta=1e4):
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Blockwise (flash-style) attention
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.named_call, name="blockwise_attention")
+def blockwise_attention(q, k, v, *, causal=True, window=0, block_k=512,
+                        q_offset=0):
+    """Online-softmax attention, grouped-query layout (no KV replication).
+
+    q: (B, Sq, H, D); k, v: (B, Sk, K, D) with H % K == 0.
+    ``q_offset``: absolute position of q[0] relative to k[0] (decode /
+    chunked prefill).  ``window`` > 0 = sliding-window attention.
+    Returns (B, Sq, H, D).
+    """
+    b, sq, h, d = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = 1.0 / np.sqrt(d)
+    q = (q * scale).astype(q.dtype).reshape(b, sq, kh, g, d)
+
+    block_k = min(block_k, sk)
+    nb = -(-sk // block_k)
+    pad = nb * block_k - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    qpos = q_offset + jnp.arange(sq)  # (Sq,)
+
+    def body(carry, i):
+        acc, m, l = carry  # acc (B,Sq,K,G,D) f32; m,l (B,Sq,K,G)
+        kb = jax.lax.dynamic_slice_in_dim(k, i * block_k, block_k, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, i * block_k, block_k, axis=1)
+        s = jnp.einsum("bqkgd,bskd->bqkgs", q, kb,
+                       preferred_element_type=jnp.float32)
+        kpos = i * block_k + jnp.arange(block_k)  # (Bk,)
+        mask = kpos[None, :] < sk  # padding
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        # window may be a traced per-layer scalar; 0/negative = full attention
+        wthr = jnp.where(window > 0, qpos[:, None] - window, jnp.int32(-(2**30)))
+        mask = mask & (kpos[None, :] > wthr)
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bqkgs,bskd->bqkgd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32,
+        )
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, sq, kh, g, d), jnp.float32)
+    m0 = jnp.full((b, sq, kh, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, kh, g), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), jnp.arange(nb))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA attention block
+# --------------------------------------------------------------------------
+
+def attention_spec(cfg):
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    spec = {
+        "wq": P((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": P((d, kvh, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": P((d, kvh, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": P((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        spec["q_norm"] = P((hd,), ("head_dim",), "ones")
+        spec["k_norm"] = P((hd,), ("head_dim",), "ones")
+    return spec
+
+
+class KVUpdate(NamedTuple):
+    k: jax.Array  # (B, S, K, D) new keys (pre-cache)
+    v: jax.Array
+
+
+def attention_qkv(params, x, positions, cfg):
+    """Project + rope + qk-norm.  Returns q, KVUpdate."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = head_rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = head_rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, KVUpdate(k, v)
+
+
+def attention_out(params, o, x_dtype):
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(x_dtype))
+
+
+def self_attention(params, x, positions, cfg, *, window=0, block_k=512):
+    """Full training-mode self-attention (causal)."""
+    q, kv = attention_qkv(params, x, positions, cfg)
+    o = blockwise_attention(q, kv.k, kv.v, causal=True, window=window,
+                            block_k=block_k)
+    return attention_out(params, o, x.dtype)
+
+
+def decode_attention(params, x, cache_k, cache_v, pos, cfg, *, window=0,
+                     uniform_pos=True):
+    """Single-token decode against a KV cache.
+
+    x: (B, 1, d); cache_k/v: (B, S_max, K, D); pos: (B,) current lengths.
+    Returns (out, new_k, new_v) where new_k/v are the updated caches.
+
+    ``uniform_pos=True`` (the batched-serving fast path: every row is at
+    the same step, as in our serve engine) writes the new KV with an
+    in-place ``dynamic_update_slice`` -- with a donated cache this is a
+    true in-place update, where the general one-hot scatter costs two
+    full cache copies of temp HBM (measured: 14.3 GiB -> 6.5 GiB on
+    minicpm-2b decode_32k, §Perf/1 iteration 2).
+    """
+    b, _, _ = x.shape
+    positions = pos[:, None]  # (B,1)
+    q, kv = attention_qkv(params, x, positions, cfg)
+    if uniform_pos:
+        # all rows share pos[0]; write one slice in place
+        zero = jnp.zeros((), jnp.int32)
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, kv.k.astype(cache_k.dtype), (zero, pos[0], zero, zero)
+        )
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, kv.v.astype(cache_v.dtype), (zero, pos[0], zero, zero)
+        )
+    else:
+        # ragged batch: scatter new kv at per-row pos
+        oh = jax.nn.one_hot(pos, cache_k.shape[1], dtype=cache_k.dtype)  # (B,S)
+        cache_k = cache_k * (1 - oh[..., None, None]) + oh[..., None, None] * kv.k
+        cache_v = cache_v * (1 - oh[..., None, None]) + oh[..., None, None] * kv.v
+    sk = cache_k.shape[1]
+    kh = cfg.n_kv_heads
+    g = cfg.n_heads // kh
+    qg = (q / np.sqrt(cfg.head_dim)).reshape(b, 1, kh, g, cfg.head_dim)
+    s = jnp.einsum("bqkgd,bskd->bqkgs", qg, cache_k,
+                   preferred_element_type=jnp.float32)
+    kpos = jnp.arange(sk)[None, None, None, None, :]
+    mask = kpos <= pos[:, None, None, None, None]
+    wthr = jnp.where(window > 0, pos[:, None, None, None, None] - window,
+                     jnp.int32(-(2**30)))
+    mask = mask & (kpos > wthr)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(cache_v.dtype)
+    o = jnp.einsum("bqkgs,bskd->bqkgd", p, cache_v)
+    o = o.reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    return attention_out(params, o, x.dtype), cache_k, cache_v
+
+
+# --------------------------------------------------------------------------
+# MLP variants
+# --------------------------------------------------------------------------
+
+def mlp_spec(cfg, d_ff=None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    if cfg.mlp_act == "swiglu":
+        return {
+            "wi": P((d, f), ("embed", "mlp")),
+            "wg": P((d, f), ("embed", "mlp")),
+            "wo": P((f, d), ("mlp", "embed")),
+        }
+    return {
+        "wi": P((d, f), ("embed", "mlp")),
+        "wo": P((f, d), ("mlp", "embed")),
+    }
+
+
+def mlp(params, x, act: str):
+    h = jnp.einsum("bsd,df->bsf", x, params["wi"].astype(x.dtype))
+    if act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, params["wg"].astype(x.dtype))
+        h = jax.nn.silu(g) * h
+    elif act == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(act)
+    return jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(x.dtype))
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding
+# --------------------------------------------------------------------------
+
+def embed_spec(cfg):
+    # table padded to vocab_padded for even vocab-axis sharding; ids are
+    # always < vocab_size, and loss/serve mask the padded logit slots.
+    return {"embedding": P((cfg.vocab_padded, cfg.d_model), ("vocab", "embed"))}
+
+
+def embed(params, ids):
+    return jnp.take(params["embedding"], ids, axis=0)
+
+
+def unembed_spec(cfg):
+    return {"w": P((cfg.d_model, cfg.vocab_padded), ("embed", "vocab"))}
+
+
+def unembed(params, x):
+    return jnp.einsum("bsd,dv->bsv", x, params["w"].astype(x.dtype))

@@ -1,0 +1,125 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-based dispatch.
+
+GSPMD-friendly dense dispatch (Mesh-TF/Switch style): tokens are grouped
+per sequence; each group independently routes its tokens into per-expert
+capacity slots via one-hot dispatch/combine einsums.  With experts sharded
+over the 'expert' logical axis (mapped to the mesh 'data' axis) and tokens
+sharded over 'batch', XLA inserts the canonical all-to-alls.
+
+Supports the two assigned MoE architectures:
+  * arctic-480b    : 128 experts top-2 + a parallel dense residual FFN
+  * deepseek-moe-16b: 64 fine-grained experts top-6 + 2 shared experts
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.params import P
+from repro.models import layers
+
+
+def moe_spec(cfg):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    spec = {
+        "router": P((d, e), ("embed", "expert")),
+        "wi": P((e, d, f), ("expert", "embed", "mlp")),
+        "wo": P((e, f, d), ("expert", "mlp", "embed")),
+    }
+    if cfg.mlp_act == "swiglu":
+        spec["wg"] = P((e, d, f), ("expert", "embed", "mlp"))
+    if cfg.n_shared_experts:
+        spec["shared"] = layers.mlp_spec(cfg, d_ff=cfg.moe_d_ff * cfg.n_shared_experts)
+    if cfg.dense_residual_ff:
+        spec["dense"] = layers.mlp_spec(cfg, d_ff=cfg.dense_residual_ff)
+    return spec
+
+
+def _capacity(s_tokens: int, k: int, e: int, factor: float) -> int:
+    c = int(np.ceil(s_tokens * k * factor / e))
+    return max(4, min(c, s_tokens))
+
+
+def moe_apply(params, x, cfg):
+    """x: (B, S, d) -> (out, aux_loss).
+
+    Tokens are regrouped into dispatch groups of ``cfg.moe_group_size``:
+    the dense dispatch/combine einsums cost O(group_size) FLOPs *per
+    token*, so small groups keep routing overhead a few percent of expert
+    compute (full-sequence groups at 4k tokens made dispatch dominate).
+    """
+    b_in, s_in, d = x.shape
+    gs = min(cfg.moe_group_size, b_in * s_in)
+    pad = (-(b_in * s_in)) % gs
+    flat = x.reshape(-1, d)
+    valid_flat = jnp.ones((flat.shape[0],), x.dtype)
+    if pad:
+        flat = jnp.pad(flat, ((0, pad), (0, 0)))
+        valid_flat = jnp.pad(valid_flat, (0, pad))
+    x = flat.reshape(-1, gs, d)
+    valid = valid_flat.reshape(-1, gs)  # (g, s) 1 for real tokens
+    b, s, _ = x.shape
+    e, k = cfg.n_experts, cfg.n_experts_per_token
+    cap = _capacity(s, k, e, cfg.capacity_factor)
+
+    logits = jnp.einsum("gsd,de->gse", x, params["router"].astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (g,s,e)
+
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (g,s,k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )  # renormalise among selected (deepseek convention)
+
+    # load-balancing auxiliary loss (Switch): e * sum(frac_tokens * frac_prob)
+    assign1 = jax.nn.one_hot(gate_idx[..., 0], e, dtype=jnp.float32)
+    frac_tokens = jnp.mean(assign1, axis=1)  # (g,e)
+    frac_probs = jnp.mean(probs, axis=1)  # (g,e)
+    aux = e * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
+
+    # capacity slots: position of each (token, choice) in its expert queue;
+    # padded tokens neither claim slots nor contribute output
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)  # (g,s,k,e)
+    onehot = onehot * valid[:, :, None, None].astype(jnp.int32)
+    flat = onehot.reshape(b, s * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat  # slots used before this entry
+    pos = pos.reshape(b, s, k, e)
+    keep = (pos < cap) & (onehot > 0)
+    slot_oh = jax.nn.one_hot(
+        jnp.where(keep, pos, cap), cap + 1, dtype=x.dtype
+    )[..., :cap]  # (g,s,k,e,cap); overflow tokens land in the dropped bucket
+
+    dispatch = jnp.einsum("gske,gskec->gsec", onehot.astype(x.dtype), slot_oh)
+    combine = jnp.einsum(
+        "gsk,gske,gskec->gsec", gate_vals.astype(x.dtype),
+        onehot.astype(x.dtype), slot_oh,
+    )
+
+    # NOTE (§Perf/2 it.2, refuted): explicitly constraining xe/h/ye to an
+    # expert-sharded layout forced GSPMD to replicate the group dim (a full
+    # all-gather per layer) and made the collective term 2.7x WORSE
+    # (3.19 s -> 8.63 s).  GSPMD's own choice — expert weights gathered to
+    # the token shards — is the better schedule at this batch size because
+    # weight bytes/layer (~3.2 GB) < top-6 capacity-inflated token bytes.
+    # Left unconstrained deliberately.
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, x)  # (g,e,cap,d)
+    h = jnp.einsum("gecd,edf->gecf", xe, params["wi"].astype(x.dtype))
+    if cfg.mlp_act == "swiglu":
+        gte = jnp.einsum("gecd,edf->gecf", xe, params["wg"].astype(x.dtype))
+        h = jax.nn.silu(gte) * h
+    elif cfg.mlp_act == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    ye = jnp.einsum("gecf,efd->gecd", h, params["wo"].astype(x.dtype))
+    out = jnp.einsum("gsec,gecd->gsd", combine, ye)
+
+    if cfg.n_shared_experts:
+        out = out + layers.mlp(params["shared"], x, cfg.mlp_act)
+    if cfg.dense_residual_ff:
+        out = out + layers.mlp(params["dense"], x, cfg.mlp_act)
+    out = out.reshape(-1, d)
+    if pad:
+        out = out[: b_in * s_in]
+    return out.reshape(b_in, s_in, d), aux * cfg.router_aux_loss

@@ -1,0 +1,95 @@
+"""Minimal parameter-spec system (no flax): shapes + logical axes + init.
+
+A model is described by a nested dict of ``P`` leaves.  From the same spec
+tree we derive:
+  * materialised parameters  (``init_params``)
+  * abstract parameters      (``abstract_params`` -- ShapeDtypeStructs for
+    the dry-run; no allocation)
+  * PartitionSpecs           (``partition_specs`` via logical-axis rules)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class P(NamedTuple):
+    shape: tuple
+    axes: tuple  # logical axis name per dim (or None)
+    init: str = "normal"  # normal | zeros | ones
+
+    def with_leading(self, n: int, axis_name: str | None = "layers"):
+        return P((n, *self.shape), (axis_name, *self.axes), self.init)
+
+
+def is_leaf(x):
+    return isinstance(x, P)
+
+
+def tree_paths(spec):
+    """Deterministic (path, leaf) list."""
+    out = []
+
+    def rec(node, path):
+        if is_leaf(node):
+            out.append((path, node))
+            return
+        for k in sorted(node):
+            rec(node[k], path + (k,))
+
+    rec(spec, ())
+    return out
+
+
+def _init_one(leaf: P, key, dtype):
+    if leaf.init == "zeros":
+        return jnp.zeros(leaf.shape, dtype)
+    if leaf.init == "ones":
+        return jnp.ones(leaf.shape, dtype)
+    fan_in = leaf.shape[-2] if len(leaf.shape) >= 2 else leaf.shape[-1]
+    std = 1.0 / np.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, leaf.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_params(spec, key, dtype=jnp.float32):
+    leaves = tree_paths(spec)
+    keys = jax.random.split(key, max(1, len(leaves)))
+    flat = {path: _init_one(leaf, k, dtype) for (path, leaf), k in zip(leaves, keys)}
+    return _unflatten(flat)
+
+
+def abstract_params(spec, dtype=jnp.float32):
+    flat = {
+        path: jax.ShapeDtypeStruct(leaf.shape, dtype)
+        for path, leaf in tree_paths(spec)
+    }
+    return _unflatten(flat)
+
+
+def axes_tree(spec):
+    flat = {path: leaf.axes for path, leaf in tree_paths(spec)}
+    return _unflatten(flat)
+
+
+def _unflatten(flat: dict):
+    root: dict = {}
+    for path, v in flat.items():
+        node = root
+        for k in path[:-1]:
+            node = node.setdefault(k, {})
+        node[path[-1]] = v
+    return root
+
+
+def map_with_axes(fn, params, spec):
+    """Map ``fn(param_leaf, logical_axes)`` over a params tree."""
+    flat = {}
+    for path, leaf in tree_paths(spec):
+        node = params
+        for k in path:
+            node = node[k]
+        flat[path] = fn(node, leaf.axes)
+    return _unflatten(flat)

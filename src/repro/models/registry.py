@@ -1,0 +1,42 @@
+"""Architecture registry: ``--arch <id>`` -> (config, model)."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig
+
+ARCHS = {
+    "rwkv6-1.6b": "rwkv6_1p6b",
+    "arctic-480b": "arctic_480b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "hymba-1.5b": "hymba_1p5b",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "qwen3-1.7b": "qwen3_1p7b",
+    "minicpm-2b": "minicpm_2b",
+    "granite-3-2b": "granite_3_2b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "internvl2-26b": "internvl2_26b",
+}
+
+
+def list_archs():
+    return sorted(ARCHS)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {list_archs()}")
+    mod = importlib.import_module(f"repro.configs.{ARCHS[name]}")
+    return mod.CONFIG
+
+
+def get_model(cfg: ModelConfig):
+    from repro.models.encdec import EncDec
+    from repro.models.rwkv6 import RWKV6
+    from repro.models.transformer import Decoder
+
+    if cfg.family == "ssm":
+        return RWKV6(cfg)
+    if cfg.family in ("audio", "encdec"):
+        return EncDec(cfg)
+    return Decoder(cfg)  # dense | moe | hybrid | vlm

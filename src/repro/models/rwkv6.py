@@ -1,0 +1,215 @@
+"""RWKV6 ("Finch"): attention-free decoder with data-dependent decay.
+
+Structure per layer (faithful to arXiv:2404.05892 at the block level):
+  * time-mix: token-shift lerps feed r/k/v/g/w projections; the decay
+    w_t = exp(-softplus(lora_w(x_t))) is *data-dependent per channel* (the
+    paper's headline mechanism); recurrence runs through the shared chunked
+    diagonal-decay scan (models/ssm.py) with the current-token bonus u.
+  * channel-mix: token-shifted squared-ReLU FFN with a sigmoid receptance
+    gate (d_ff = 7168).
+
+Head size is fixed at 64 (d_model 2048 -> 32 heads).  Decode state per
+layer: (time-shift x, channel-shift x, per-head (64, 64) state matrix) --
+O(1) in sequence length, which is why this arch runs the long_500k shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.params import P, init_params, abstract_params
+from repro.parallel.sharding import Ax, constrain
+
+HEAD_SIZE = 64
+
+
+def _tm_spec(cfg):
+    d = cfg.d_model
+    nh = d // HEAD_SIZE
+    return {
+        "mu": P((5, d), (None, "embed"), "zeros"),  # r,k,v,w,g lerp factors
+        "wr": P((d, d), ("embed", "heads")),
+        "wk": P((d, d), ("embed", "heads")),
+        "wv": P((d, d), ("embed", "heads")),
+        "wg": P((d, d), ("embed", "heads")),
+        "ww": P((d, d), ("embed", "heads")),
+        "w0": P((d,), ("heads",), "zeros"),
+        "u": P((nh, HEAD_SIZE), ("ssm_heads", None), "zeros"),
+        "ln_x": P((d,), ("heads",), "ones"),  # per-head group norm scale
+        "wo": P((d, d), ("heads", "embed")),
+    }
+
+
+def _cm_spec(cfg):
+    d = cfg.d_model
+    return {
+        "mu": P((2, d), (None, "embed"), "zeros"),  # k, r lerp factors
+        "wk": P((d, cfg.d_ff), ("embed", "mlp")),
+        "wv": P((cfg.d_ff, d), ("mlp", "embed")),
+        "wr": P((d, d), ("embed", "embed_act")),
+    }
+
+
+def _lerp(x, xprev, mu):
+    return x + (xprev - x) * jax.nn.sigmoid(mu).astype(x.dtype)
+
+
+def _time_mix_project(p, x, xprev, cfg):
+    nh = cfg.d_model // HEAD_SIZE
+    mu = p["mu"]
+    xr = _lerp(x, xprev, mu[0])
+    xk = _lerp(x, xprev, mu[1])
+    xv = _lerp(x, xprev, mu[2])
+    xw = _lerp(x, xprev, mu[3])
+    xg = _lerp(x, xprev, mu[4])
+    shp = (*x.shape[:-1], nh, HEAD_SIZE)
+    r = jnp.einsum("...d,de->...e", xr, p["wr"].astype(x.dtype)).reshape(shp)
+    k = jnp.einsum("...d,de->...e", xk, p["wk"].astype(x.dtype)).reshape(shp)
+    v = jnp.einsum("...d,de->...e", xv, p["wv"].astype(x.dtype)).reshape(shp)
+    g = jax.nn.silu(jnp.einsum("...d,de->...e", xg, p["wg"].astype(x.dtype)))
+    logw = -jax.nn.softplus(
+        jnp.einsum("...d,de->...e", xw, p["ww"].astype(x.dtype)).astype(jnp.float32)
+        + p["w0"].astype(jnp.float32)
+    ).reshape(*x.shape[:-1], nh, HEAD_SIZE)
+    return r, k, v, g, logw
+
+
+def _time_mix_out(p, wkv, g, cfg, x_dtype):
+    """Per-head group norm, gate, output projection."""
+    d = cfg.d_model
+    y = wkv.astype(jnp.float32)
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-5)
+    y = y.reshape(*y.shape[:-2], d) * p["ln_x"].astype(jnp.float32)
+    y = y.astype(x_dtype) * g.astype(x_dtype)
+    return jnp.einsum("...e,ed->...d", y, p["wo"].astype(x_dtype))
+
+
+def _channel_mix(p, x, xprev, cfg):
+    xk = _lerp(x, xprev, p["mu"][0])
+    xr = _lerp(x, xprev, p["mu"][1])
+    k = jnp.einsum("...d,df->...f", xk, p["wk"].astype(x.dtype))
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("...f,fd->...d", k, p["wv"].astype(x.dtype))
+    r = jax.nn.sigmoid(jnp.einsum("...d,de->...e", xr, p["wr"].astype(x.dtype)))
+    return r.astype(x.dtype) * kv
+
+
+def _shift(x):
+    """(B, S, d) -> previous-token tensor (zero for t=0)."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+class RWKV6:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        assert cfg.d_model % HEAD_SIZE == 0
+
+    def spec(self):
+        cfg = self.cfg
+        one = {
+            "ln1": L.rmsnorm_spec(cfg.d_model),
+            "ln2": L.rmsnorm_spec(cfg.d_model),
+            "tm": _tm_spec(cfg),
+            "cm": _cm_spec(cfg),
+        }
+        stacked = jax.tree.map(
+            lambda p: p.with_leading(cfg.n_layers),
+            one,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        return {
+            "embed": L.embed_spec(cfg),
+            "layers": stacked,
+            "final_norm": L.rmsnorm_spec(cfg.d_model),
+            "unembed": L.unembed_spec(cfg),
+        }
+
+    def init(self, key, dtype=jnp.float32):
+        return init_params(self.spec(), key, dtype)
+
+    def abstract(self, dtype=jnp.float32):
+        return abstract_params(self.spec(), dtype)
+
+    def forward(self, params, tokens, prefix_embeds=None, ssm_chunk=64):
+        cfg = self.cfg
+        x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+        if prefix_embeds is not None:
+            x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+        x = constrain(x, "batch", "seq", "embed_act")
+
+        def body(carry, lp):
+            xc, aux = carry
+            h = L.rmsnorm(lp["ln1"], xc, cfg.norm_eps)
+            r, k, v, g, logw = _time_mix_project(lp["tm"], h, _shift(h), cfg)
+            wkv, _ = S.chunked_decay_attention(
+                r, k, v, logw, u=lp["tm"]["u"], chunk=ssm_chunk, inclusive=False
+            )
+            xc = xc + _time_mix_out(lp["tm"], wkv, g, cfg, xc.dtype)
+            h = L.rmsnorm(lp["ln2"], xc, cfg.norm_eps)
+            xc = xc + _channel_mix(lp["cm"], h, _shift(h), cfg)
+            xc = constrain(xc, "batch", "seq", "embed_act")
+            return (xc, aux), None
+
+        body_fn = body
+        if cfg.remat:
+            body_fn = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        (x, _), _ = L.scan_or_unroll(
+            body_fn, (x, 0.0), params["layers"], cfg.n_layers, cfg.scan_layers
+        )
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = L.unembed(params["unembed"], x)
+        return constrain(logits, "batch", "seq", "vocab"), 0.0
+
+    def init_cache(self, batch, max_len, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        nh = cfg.d_model // HEAD_SIZE
+        lshape = (cfg.n_layers, batch)
+        return {
+            "tm_shift": jnp.zeros((*lshape, cfg.d_model), dtype),
+            "cm_shift": jnp.zeros((*lshape, cfg.d_model), dtype),
+            "state": jnp.zeros((*lshape, nh, HEAD_SIZE, HEAD_SIZE), jnp.float32),
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def cache_axes(self):
+        return {
+            "tm_shift": Ax(("layers", "cache_batch", "embed_act")),
+            "cm_shift": Ax(("layers", "cache_batch", "embed_act")),
+            "state": Ax(("layers", "cache_batch", "ssm_heads", None, None)),
+            "pos": Ax(("cache_batch",)),
+        }
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        x = L.embed(params["embed"], tokens).astype(cfg.dtype)[:, 0]  # (B, d)
+
+        def body(xc, xs):
+            lp, tm_s, cm_s, st = xs
+            h = L.rmsnorm(lp["ln1"], xc, cfg.norm_eps)
+            r, k, v, g, logw = _time_mix_project(lp["tm"], h, tm_s.astype(h.dtype), cfg)
+            wkv, st2 = S.decay_attention_step(r, k, v, logw, lp["tm"]["u"], st)
+            xc = xc + _time_mix_out(lp["tm"], wkv, g, cfg, xc.dtype)
+            h2 = L.rmsnorm(lp["ln2"], xc, cfg.norm_eps)
+            xc = xc + _channel_mix(lp["cm"], h2, cm_s.astype(h2.dtype), cfg)
+            return xc, (h.astype(tm_s.dtype), h2.astype(cm_s.dtype), st2)
+
+        x, (tm_new, cm_new, st_new) = L.scan_or_unroll(
+            body, x,
+            (params["layers"], cache["tm_shift"], cache["cm_shift"],
+             cache["state"]),
+            cfg.n_layers, cfg.scan_layers,
+        )
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = L.unembed(params["unembed"], x[:, None])
+        return logits, {
+            "tm_shift": tm_new,
+            "cm_shift": cm_new,
+            "state": st_new,
+            "pos": cache["pos"] + 1,
+        }

@@ -1,0 +1,124 @@
+"""Chunked linear attention with data-dependent diagonal decay.
+
+One primitive covers both assigned recurrent families:
+  * RWKV6 ("Finch") time-mix: per-key-channel data-dependent decay w_t plus
+    a current-token bonus u  --  S_t = diag(w_t) S_{t-1} + k_t v_t^T,
+    out_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T).
+  * Mamba2-style SSD heads (Hymba's parallel-SSM branch): scalar-per-head
+    decay == the same recurrence with w_t broadcast across key channels.
+
+Sequential scans are O(T) steps; this implements the standard chunked
+decomposition (GLA/SSD style) where a chunk of C steps becomes three
+matmuls.  All exponents are differences of cumulative log-decays along
+*forward* spans, hence <= 0: everything stays in (0, 1] -- numerically
+stable without secondary chunking.
+
+    la_t   = sum_{tau<=t} log w_tau           (cumulative, inclusive)
+    inter  : out_t += (r_t * exp(la_{t-1})) @ S_0
+    intra  : out_t += sum_{tau<t} [sum_i r_ti k_taui exp(la_{t-1,i}-la_tau,i)] v_tau
+    bonus  : out_t += (sum_i r_ti u_i k_ti) v_t
+    carry  : S_C = diag(exp(la_C)) S_0 + sum_tau (k_tau exp(la_C-la_tau))^T v_tau
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def decay_attention_step(r, k, v, logw, u, state):
+    """One decode step.
+
+    r/k/logw: (B, H, Dk); v: (B, H, Dv); u: (H, Dk) or None;
+    state: (B, H, Dk, Dv).  Returns (out (B, H, Dv), new_state).
+    """
+    r = r.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    out = jnp.einsum("bhi,bhiv->bhv", r, state)
+    if u is not None:
+        out = out + jnp.einsum("bhi,hi,bhi,bhv->bhv", r, u.astype(jnp.float32), k, v)
+        new_state = jnp.exp(logw)[..., None] * state + k[..., None] * v[..., None, :]
+    else:
+        # SSD convention: output reads the *updated* state (inclusive)
+        new_state = jnp.exp(logw)[..., None] * state + k[..., None] * v[..., None, :]
+        out = jnp.einsum("bhi,bhiv->bhv", r, new_state)
+    return out, new_state
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "inclusive"))
+def chunked_decay_attention(r, k, v, logw, u=None, state0=None, chunk=64,
+                            inclusive=False):
+    """Full-sequence chunked scan.
+
+    r/k: (B, T, H, Dk); v: (B, T, H, Dv); logw: (B, T, H, Dk) (<= 0,
+    broadcastable over Dk for scalar-per-head decay); u: (H, Dk) or None.
+    ``inclusive``: out_t reads the state including step t (SSD convention,
+    used when u is None).  Returns (out (B, T, H, Dv), state (B,H,Dk,Dv)).
+    """
+    b, t, h, dk = r.shape
+    dv = v.shape[-1]
+    logw = jnp.broadcast_to(logw, (b, t, h, dk)).astype(jnp.float32)
+    if state0 is None:
+        state0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    c = min(chunk, t)
+    t_orig = t
+    if t % c:
+        # Pad to a chunk multiple with neutral steps: logw=0 (exp(0)=1 keeps
+        # the state unchanged), k=0 (no contribution), r=0 (no output read).
+        # The scan's final state therefore equals the state at t_orig; padded
+        # outputs are sliced off below.
+        pad = c - t % c
+        padt = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, logw = padt(r), padt(k), padt(v), padt(logw)
+        t = t + pad
+    n = t // c
+
+    rc = r.reshape(b, n, c, h, dk).astype(jnp.float32)
+    kc = k.reshape(b, n, c, h, dk).astype(jnp.float32)
+    vc = v.reshape(b, n, c, h, dv).astype(jnp.float32)
+    lw = logw.reshape(b, n, c, h, dk)
+
+    tri = jnp.tril(jnp.ones((c, c), jnp.float32), -1 if not inclusive else 0)
+
+    def body(state, xs):
+        rr, kk, vv, ww = xs  # (b,c,h,dk/(dv))
+        la = jnp.cumsum(ww, axis=1)  # (b,c,h,dk) inclusive
+        a = la if inclusive else la - ww  # exponent used by queries
+        q_eff = rr * jnp.exp(a)
+        k_dec = kk * jnp.exp(-la + la[:, -1:, :, :])  # k * exp(la_C - la_tau)
+        # inter-chunk
+        out = jnp.einsum("bchi,bhiv->bchv", q_eff, state)
+        # intra-chunk: scores_ttau = sum_i r_ti k_taui exp(a_t - la_tau).
+        # On the valid region (tau < t for exclusive, tau <= t inclusive)
+        # the exponent is a sum of log-decays over a forward span, so it is
+        # <= 0 *pairwise*.  Any factored form (q*e^a)(k*e^-la) has one
+        # unbounded side under strong decay, so we form the exact pairwise
+        # exponent tensor, clamp the (masked-out) upper triangle, and pay
+        # the (C, C, Dk) workspace -- chunk size keeps it modest.
+        expo = a[:, :, None, :, :] - la[:, None, :, :, :]  # (b,c,c,h,dk)
+        dmat = jnp.exp(jnp.minimum(expo, 0.0))
+        scores = jnp.einsum("bchi,bdhi,bcdhi->bhcd", rr, kk, dmat)
+        mask = tri[None, None]
+        scores = scores * mask
+        out = out + jnp.einsum("bhcd,bdhv->bchv", scores, vv)
+        if u is not None:
+            bonus = jnp.einsum("bchi,hi,bchi->bch", rr, u.astype(jnp.float32), kk)
+            out = out + bonus[..., None] * vv
+        new_state = jnp.exp(la[:, -1])[..., None] * state + jnp.einsum(
+            "bchi,bchv->bhiv", k_dec, vv
+        )
+        return new_state, out
+
+    xs = (
+        jnp.moveaxis(rc, 1, 0),
+        jnp.moveaxis(kc, 1, 0),
+        jnp.moveaxis(vc, 1, 0),
+        jnp.moveaxis(lw, 1, 0),
+    )
+    state, out = jax.lax.scan(body, state0, xs)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, t, h, dv)
+    if t != t_orig:
+        out = out[:, :t_orig]
+    return out, state

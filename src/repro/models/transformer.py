@@ -1,0 +1,339 @@
+"""Decoder-only transformer assembly: dense, MoE, and hybrid families.
+
+One config-driven implementation covers 8 of the 10 assigned architectures
+(arctic, deepseek-moe, nemotron, qwen3, minicpm, granite, hymba, and the
+internvl2 language backbone).  Layers are stacked with ``lax.scan`` (fast
+compiles at 28-48 layers) and optionally rematerialised.
+
+Hybrid (Hymba): each layer runs attention and a Mamba2-style SSD branch in
+parallel on the same normed input and averages the outputs; a static
+per-layer window vector selects full vs sliding-window attention.  Decode
+for hybrids is unrolled so SWA layers keep ring-buffer caches of window
+size while global layers keep full caches (this asymmetry is the point of
+the architecture).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.params import P, init_params, abstract_params
+from repro.parallel.sharding import Ax, constrain
+
+
+# --------------------------------------------------------------------------
+# Hybrid SSD branch (Mamba2-style scalar-per-head decay)
+# --------------------------------------------------------------------------
+
+def ssd_spec(cfg):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    nh = di // cfg.head_dim
+    n = cfg.ssm_state
+    return {
+        "wx": P((d, di), ("embed", "mlp")),
+        "wz": P((d, di), ("embed", "mlp")),
+        "wb": P((d, nh, n), ("embed", "ssm_heads", "ssm_state")),
+        "wc": P((d, nh, n), ("embed", "ssm_heads", "ssm_state")),
+        "wdt": P((d, nh), ("embed", "ssm_heads")),
+        "dt0": P((nh,), ("ssm_heads",), "zeros"),
+        "norm": P((di,), ("mlp",), "ones"),
+        "wo": P((di, d), ("mlp", "embed")),
+    }
+
+
+def _ssd_project(params, x, cfg):
+    di = cfg.ssm_expand * cfg.d_model
+    nh = di // cfg.head_dim
+    xv = jnp.einsum("bsd,de->bse", x, params["wx"].astype(x.dtype))
+    z = jnp.einsum("bsd,de->bse", x, params["wz"].astype(x.dtype))
+    bts = jnp.einsum("bsd,dhn->bshn", x, params["wb"].astype(x.dtype))
+    cts = jnp.einsum("bsd,dhn->bshn", x, params["wc"].astype(x.dtype))
+    dt = jnp.einsum("bsd,dh->bsh", x, params["wdt"].astype(x.dtype))
+    logw = -jax.nn.softplus(dt.astype(jnp.float32) + params["dt0"].astype(jnp.float32))
+    v = xv.reshape(*xv.shape[:-1], nh, cfg.head_dim)
+    return v, z, bts, cts, logw
+
+
+def _ssd_out(params, y, z, cfg, x_dtype):
+    di = cfg.ssm_expand * cfg.d_model
+    y = y.reshape(*y.shape[:-2], di)
+    dt = y.dtype
+    yn = y.astype(jnp.float32)
+    yn = yn * jax.lax.rsqrt(jnp.mean(yn * yn, -1, keepdims=True) + 1e-5)
+    y = (yn * params["norm"].astype(jnp.float32)).astype(x_dtype)
+    y = y * jax.nn.silu(z).astype(x_dtype)
+    return jnp.einsum("bse,ed->bsd", y, params["wo"].astype(x_dtype))
+
+
+def ssd_apply(params, x, cfg, state0=None, chunk=64):
+    """Full-sequence SSD branch.  Returns (out, final_state)."""
+    v, z, bts, cts, logw = _ssd_project(params, x, cfg)
+    out, state = S.chunked_decay_attention(
+        cts, bts, v, logw[..., None], u=None, state0=state0, chunk=chunk,
+        inclusive=True,
+    )
+    return _ssd_out(params, out, z, cfg, x.dtype), state
+
+
+def ssd_step(params, x, cfg, state):
+    """Single-token decode.  x: (B,1,d)."""
+    v, z, bts, cts, logw = _ssd_project(params, x, cfg)
+    out, state = S.decay_attention_step(
+        cts[:, 0], bts[:, 0], v[:, 0],
+        jnp.broadcast_to(logw[:, 0, :, None], bts[:, 0].shape),
+        None, state,
+    )
+    return _ssd_out(params, out[:, None], z, cfg, x.dtype), state
+
+
+# --------------------------------------------------------------------------
+# Layer spec / apply
+# --------------------------------------------------------------------------
+
+def layer_spec(cfg):
+    spec = {
+        "ln1": L.rmsnorm_spec(cfg.d_model),
+        "ln2": L.rmsnorm_spec(cfg.d_model),
+        "attn": L.attention_spec(cfg),
+    }
+    if cfg.n_experts:
+        spec["moe"] = M.moe_spec(cfg)
+    else:
+        spec["mlp"] = L.mlp_spec(cfg)
+    if cfg.family == "hybrid":
+        spec["ssd"] = ssd_spec(cfg)
+    return spec
+
+
+def _ffn(params, h, cfg):
+    if cfg.n_experts:
+        out, aux = M.moe_apply(params["moe"], h, cfg)
+        return out, aux
+    return L.mlp(params["mlp"], h, cfg.mlp_act), 0.0
+
+
+def layer_apply(params, x, positions, cfg, window, ssm_chunk=64):
+    """Training/prefill layer.  window: per-layer scalar (0 = full)."""
+    h = L.rmsnorm(params["ln1"], x, cfg.norm_eps)
+    attn = L.self_attention(params["attn"], h, positions, cfg, window=window)
+    if cfg.family == "hybrid":
+        ssm_out, _ = ssd_apply(params["ssd"], h, cfg, chunk=ssm_chunk)
+        attn = (attn + ssm_out) * 0.5
+    x = x + attn
+    x = constrain(x, "batch", "seq", "embed_act")
+    h = L.rmsnorm(params["ln2"], x, cfg.norm_eps)
+    out, aux = _ffn(params, h, cfg)
+    x = x + out
+    x = constrain(x, "batch", "seq", "embed_act")
+    return x, aux
+
+
+# --------------------------------------------------------------------------
+# Decoder model
+# --------------------------------------------------------------------------
+
+class Decoder:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # ---- params ----
+    def spec(self):
+        cfg = self.cfg
+        one = layer_spec(cfg)
+        stacked = jax.tree.map(
+            lambda p: p.with_leading(cfg.n_layers),
+            one,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        spec = {
+            "embed": L.embed_spec(cfg),
+            "layers": stacked,
+            "final_norm": L.rmsnorm_spec(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            spec["unembed"] = L.unembed_spec(cfg)
+        return spec
+
+    def init(self, key, dtype=jnp.float32):
+        return init_params(self.spec(), key, dtype)
+
+    def abstract(self, dtype=jnp.float32):
+        return abstract_params(self.spec(), dtype)
+
+    def windows(self):
+        cfg = self.cfg
+        if cfg.family == "hybrid" and cfg.attn_window:
+            w = [
+                0 if i in cfg.global_attn_layers else cfg.attn_window
+                for i in range(cfg.n_layers)
+            ]
+        else:
+            w = [cfg.attn_window] * cfg.n_layers
+        return np.asarray(w, np.int32)
+
+    # ---- forward (train / full-sequence) ----
+    def forward(self, params, tokens, prefix_embeds=None):
+        """tokens: (B, S) int32; prefix_embeds: (B, P, d) or None.
+
+        Returns (logits (B, S_total, V), aux_loss).
+        """
+        cfg = self.cfg
+        x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+        if prefix_embeds is not None:
+            x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x = constrain(x, "batch", "seq", "embed_act")
+        windows = jnp.asarray(self.windows())
+
+        def body(carry, xs):
+            xc, aux = carry
+            lp, w = xs
+            xc, a = layer_apply(lp, xc, positions, cfg, w)
+            return (xc, aux + a), None
+
+        body_fn = body
+        if cfg.remat:
+            body_fn = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        (x, aux), _ = L.scan_or_unroll(
+            body_fn, (x, 0.0), (params["layers"], windows),
+            cfg.n_layers, cfg.scan_layers,
+        )
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = jnp.einsum(
+                "bsd,vd->bsv", x, params["embed"]["embedding"].astype(x.dtype)
+            )
+        else:
+            logits = L.unembed(params["unembed"], x)
+        logits = constrain(logits, "batch", "seq", "vocab")
+        return logits, aux
+
+    # ---- decode ----
+    def init_cache(self, batch, max_len, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        kvh, hd = cfg.n_kv_heads, cfg.head_dim
+        if cfg.family == "hybrid":
+            di = cfg.ssm_expand * cfg.d_model
+            nh = di // hd
+            caches = []
+            for i in range(cfg.n_layers):
+                w = int(self.windows()[i])
+                slots = max_len if w == 0 else min(w, max_len)
+                caches.append(
+                    {
+                        "k": jnp.zeros((batch, slots, kvh, hd), dtype),
+                        "v": jnp.zeros((batch, slots, kvh, hd), dtype),
+                        "kpos": jnp.full((batch, slots), -1, jnp.int32),
+                        "state": jnp.zeros((batch, nh, cfg.ssm_state, hd), jnp.float32),
+                    }
+                )
+            return {"layers": caches, "pos": jnp.zeros((batch,), jnp.int32)}
+        return {
+            "k": jnp.zeros((cfg.n_layers, batch, max_len, kvh, hd), dtype),
+            "v": jnp.zeros((cfg.n_layers, batch, max_len, kvh, hd), dtype),
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def cache_axes(self):
+        """Logical axes for each cache leaf (for dry-run shardings)."""
+        cfg = self.cfg
+        if cfg.family == "hybrid":
+            per_layer = {
+                "k": Ax(("cache_batch", "cache_seq", "kv_heads", "head_dim")),
+                "v": Ax(("cache_batch", "cache_seq", "kv_heads", "head_dim")),
+                "kpos": Ax(("cache_batch", "cache_seq")),
+                "state": Ax(("cache_batch", "ssm_heads", "ssm_state", "head_dim")),
+            }
+            return {
+                "layers": [dict(per_layer) for _ in range(cfg.n_layers)],
+                "pos": Ax(("cache_batch",)),
+            }
+        kv = Ax(("layers", "cache_batch", "cache_seq", "kv_heads", "head_dim"))
+        return {"k": kv, "v": kv, "pos": Ax(("cache_batch",))}
+
+    def decode_step(self, params, cache, tokens):
+        """tokens: (B, 1) -> (logits (B, 1, V), cache)."""
+        cfg = self.cfg
+        x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+        x = constrain(x, "batch", "seq", "embed_act")
+        pos = cache["pos"]
+        if cfg.family == "hybrid":
+            new_layers = []
+            for i in range(cfg.n_layers):
+                lp = jax.tree.map(lambda p: p[i], params["layers"])
+                lc = cache["layers"][i]
+                w = int(self.windows()[i])
+                x, nlc = self._hybrid_step(lp, x, lc, pos, w)
+                new_layers.append(nlc)
+            x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+            logits = self._unembed(params, x)
+            return logits, {"layers": new_layers, "pos": pos + 1}
+
+        def body(carry, xs):
+            xc = carry
+            lp, ck, cv = xs
+            h = L.rmsnorm(lp["ln1"], xc, cfg.norm_eps)
+            attn, nk, nv = L.decode_attention(
+                lp["attn"], h, ck, cv, pos, cfg, window=cfg.attn_window
+            )
+            xc = xc + attn
+            h = L.rmsnorm(lp["ln2"], xc, cfg.norm_eps)
+            out, _ = _ffn(lp, h, cfg)
+            return xc + out, (nk, nv)
+
+        x, (nk, nv) = L.scan_or_unroll(
+            body, x, (params["layers"], cache["k"], cache["v"]),
+            cfg.n_layers, cfg.scan_layers,
+        )
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = self._unembed(params, x)
+        return logits, {"k": nk, "v": nv, "pos": pos + 1}
+
+    def _unembed(self, params, x):
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            return jnp.einsum(
+                "bsd,vd->bsv", x, params["embed"]["embedding"].astype(x.dtype)
+            )
+        return L.unembed(params["unembed"], x)
+
+    def _hybrid_step(self, lp, x, lc, pos, window):
+        """One hybrid layer, single token, ring-buffer SWA cache."""
+        cfg = self.cfg
+        h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        q, kv = L.attention_qkv(lp["attn"], h, pos[:, None], cfg)
+        slots = lc["k"].shape[1]
+        slot = pos % slots
+        oh = jax.nn.one_hot(slot, slots, dtype=lc["k"].dtype)
+        nk = lc["k"] * (1 - oh[..., None, None]) + oh[..., None, None] * kv.k
+        nv = lc["v"] * (1 - oh[..., None, None]) + oh[..., None, None] * kv.v
+        kpos = jnp.where(oh > 0, pos[:, None], lc["kpos"])
+        # attend over ring buffer using stored absolute positions
+        b = x.shape[0]
+        kh, g, hd = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, cfg.head_dim
+        qg = (q / np.sqrt(hd)).reshape(b, 1, kh, g, hd)
+        s = jnp.einsum("bqkgd,bskd->bqkgs", qg, nk,
+                       preferred_element_type=jnp.float32)
+        valid = (kpos >= 0) & (kpos <= pos[:, None])
+        if window:
+            valid = valid & (kpos > pos[:, None] - window)
+        s = jnp.where(valid[:, None, None, None, :], s, L.NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(nv.dtype)
+        o = jnp.einsum("bqkgs,bskd->bqkgd", p, nv).reshape(b, 1, cfg.n_heads, hd)
+        attn = L.attention_out(lp["attn"], o, x.dtype)
+        ssm_out, nstate = ssd_step(lp["ssd"], h, cfg, lc["state"])
+        x = x + (attn + ssm_out) * 0.5
+        h2 = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        out, _ = _ffn(lp, h2, cfg)
+        return x + out, {"k": nk, "v": nv, "kpos": kpos, "state": nstate}

@@ -1,0 +1,1 @@
+"""Runtime substrate: checkpointing, fault tolerance, elasticity."""

@@ -1,0 +1,111 @@
+"""Fault tolerance: step watchdog, straggler detection, elastic restart.
+
+At thousand-node scale three failure classes dominate; each has a handler
+here that the Trainer wires in:
+
+  * **crash / preemption** -> checkpoint-restart: the Trainer resumes from
+    ``CheckpointManager.latest_step`` automatically, and a SIGTERM handler
+    writes an emergency checkpoint before exit (preemption notice).
+  * **stragglers** -> ``StragglerDetector`` keeps a robust EWMA of step
+    times; steps slower than ``threshold x`` median trigger a callback
+    (log / exclude host / re-mesh decision is deployment policy).
+  * **node loss** -> ``elastic_remesh``: rebuild a smaller mesh from the
+    surviving devices and reshard the latest checkpoint onto it
+    (reshard-on-load makes this a pure data movement).
+"""
+from __future__ import annotations
+
+import signal
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import Mesh
+
+
+@dataclass
+class StragglerDetector:
+    window: int = 50
+    threshold: float = 2.0
+    _times: deque = field(default_factory=lambda: deque(maxlen=256))
+    slow_steps: list = field(default_factory=list)
+
+    def observe(self, step: int, seconds: float) -> bool:
+        """Record a step time; returns True if this step was a straggler."""
+        self._times.append(seconds)
+        if len(self._times) < max(8, self.window // 4):
+            return False
+        med = sorted(self._times)[len(self._times) // 2]
+        if seconds > self.threshold * med:
+            self.slow_steps.append((step, seconds, med))
+            return True
+        return False
+
+    @property
+    def median(self):
+        if not self._times:
+            return 0.0
+        return sorted(self._times)[len(self._times) // 2]
+
+
+class PreemptionHandler:
+    """SIGTERM -> request a final checkpoint at the next step boundary."""
+
+    def __init__(self):
+        self.requested = False
+        self._prev = None
+
+    def install(self):
+        def handler(signum, frame):
+            self.requested = True
+            if callable(self._prev):  # pragma: no cover
+                self._prev(signum, frame)
+
+        self._prev = signal.signal(signal.SIGTERM, handler)
+        return self
+
+    def uninstall(self):
+        if self._prev is not None:
+            signal.signal(signal.SIGTERM, self._prev)
+
+
+def surviving_mesh(axis_names=("data", "model"), model_parallel: int = 1,
+                   devices=None) -> Mesh:
+    """Build the largest well-formed mesh from surviving devices.
+
+    Drops trailing devices so the data axis stays a whole number; at real
+    scale 'surviving' comes from the coordinator's health service, here
+    from ``jax.devices()``.
+    """
+    import numpy as np
+
+    devices = list(devices if devices is not None else jax.devices())
+    n = (len(devices) // model_parallel) * model_parallel
+    devices = devices[:n]
+    arr = np.array(devices).reshape(n // model_parallel, model_parallel)
+    return Mesh(arr, axis_names)
+
+
+def elastic_remesh(ckpt_manager, skeleton, make_shardings, *, devices=None,
+                   model_parallel: int = 1):
+    """Resume the latest checkpoint on a smaller (surviving) mesh.
+
+    ``make_shardings(mesh)`` -> tree of NamedShardings for ``skeleton``.
+    Returns (mesh, step, tree, extras) or None when no checkpoint exists.
+    """
+    mesh = surviving_mesh(model_parallel=model_parallel, devices=devices)
+    out = ckpt_manager.restore_latest(skeleton, make_shardings(mesh))
+    if out is None:
+        return None
+    step, tree, extras = out
+    return mesh, step, tree, extras
+
+
+class StepTimer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

@@ -1,0 +1,1 @@
+"""Serving substrate: decode steps, sampling, batched engine."""

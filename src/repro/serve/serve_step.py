@@ -1,0 +1,51 @@
+"""Serve step factory: one decode step + sampling against a KV/state cache.
+
+``make_serve_step(model)`` returns
+    (params, cache, tokens (B,1), rng) -> (next_tokens (B,1), logits, cache)
+with greedy or temperature sampling; padded-vocab logit slots are masked.
+This is the function the decode-shape dry-run cells lower (one new token
+against a seq_len cache, per the assignment).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def make_serve_step(model, temperature: float = 0.0):
+    cfg = model.cfg
+
+    def serve_step(params, cache, tokens, rng):
+        logits, cache = model.decode_step(params, cache, tokens)
+        x = logits[:, -1].astype(jnp.float32)
+        valid = jnp.arange(x.shape[-1]) < cfg.vocab_size
+        x = jnp.where(valid[None, :], x, -1e30)
+        if temperature > 0:
+            nxt = jax.random.categorical(rng, x / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(x, axis=-1)
+        return nxt[:, None].astype(jnp.int32), logits, cache
+
+    return serve_step
+
+
+def make_prefill_fn(model):
+    """Full-sequence forward used by the prefill-shape cells.
+
+    Returns last-position logits; the cache write is the cheap epilogue of
+    the same compute (see DESIGN.md 'prefill lowering' note).
+    """
+    cfg = model.cfg
+
+    def prefill(params, tokens, *extra):
+        if cfg.family in ("audio", "encdec"):
+            logits, _ = model.forward(params, tokens, extra[0])
+        elif cfg.frontend_tokens:
+            logits, _ = model.forward(params, tokens, prefix_embeds=extra[0])
+        else:
+            logits, _ = model.forward(params, tokens)
+        return logits[:, -1:]
+
+    return prefill

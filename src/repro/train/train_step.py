@@ -1,0 +1,182 @@
+"""Train step factory: loss (chunked CE + z-loss + MoE aux), grad, update.
+
+``make_train_step(model, run)`` returns a pure function
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+suitable for ``jax.jit`` with explicit shardings.  Batches carry:
+    tokens  (B, S) int32                       -- always
+    frames  (B, S_enc, d) float                -- audio (encoder stub input)
+    prefix  (B, P, d) float                    -- vlm (patch stub input)
+Loss is next-token cross entropy over text positions; the padded vocab tail
+is masked out of the softmax.  Gradient accumulation: set run.microbatch to
+split the per-device batch into sequential microbatches (scan).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import optimizer as opt
+from repro.parallel.sharding import constrain
+
+
+def cross_entropy(logits, labels, vocab_size, zloss=0.0, chunk=512,
+                  weights=None):
+    """Mean next-token CE, chunked over sequence to bound logit memory.
+
+    logits: (B, S, Vp) (padded vocab); labels: (B, S) (already shifted);
+    weights: optional (B, S) loss mask (0 = ignore position).
+    """
+    b, s, vp = logits.shape
+    chunk = min(chunk, s)
+    n = s // chunk if s % chunk == 0 else 1
+    if s % chunk:
+        chunk = s
+    if weights is None:
+        weights = jnp.ones((b, s), jnp.float32)
+    lg = logits.reshape(b, n, chunk, vp)
+    lb = labels.reshape(b, n, chunk)
+    lw = weights.astype(jnp.float32).reshape(b, n, chunk)
+
+    def body(acc, xs):
+        lgc, lbc, lwc = xs  # (B, chunk, Vp), (B, chunk), (B, chunk)
+        x = lgc.astype(jnp.float32)
+        # mask padded vocab slots out of the softmax
+        valid = jnp.arange(vp) < vocab_size
+        x = jnp.where(valid[None, None, :], x, -1e30)
+        m = jnp.max(x, axis=-1, keepdims=True)
+        lse = jnp.log(jnp.sum(jnp.exp(x - m), axis=-1)) + m[..., 0]
+        # gold logit via one-hot contraction: take_along_axis over a
+        # vocab-sharded axis would force GSPMD to all-gather the logits;
+        # the einsum reduces over the sharded axis instead (psum).
+        oh = (lbc[..., None] == jnp.arange(vp)[None, None, :]).astype(x.dtype)
+        gold = jnp.einsum("bsv,bsv->bs", x, oh)
+        ce = jnp.sum((lse - gold) * lwc)
+        zl = jnp.sum(jnp.square(lse) * lwc) * zloss
+        return acc + ce + zl, None
+
+    xs = (jnp.moveaxis(lg, 1, 0), jnp.moveaxis(lb, 1, 0),
+          jnp.moveaxis(lw, 1, 0))
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), xs)
+    return total / jnp.maximum(jnp.sum(weights), 1.0)
+
+
+def make_loss_fn(model, run):
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        # Forward the FULL token length and mask the final position out of
+        # the loss instead of slicing tokens[:, :-1].  An odd sequence
+        # length (4095) breaks every power-of-two tiling downstream --
+        # MoE group reshape (forces a full activation all-gather +
+        # replicated dispatch under GSPMD: measured 14.2 GB/layer/device
+        # of collectives on deepseek train_4k), chunked-CE scan, and the
+        # SSM chunk scan.  See EXPERIMENTS.md §Perf/2.
+        tokens = batch["tokens"]
+        labels = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1
+        )
+        wts = jnp.ones(tokens.shape, jnp.float32).at[:, -1].set(0.0)
+        if "frames" in batch:
+            logits, aux = model.forward(params, tokens, batch["frames"])
+        elif "prefix" in batch:
+            logits, aux = model.forward(
+                params, tokens, prefix_embeds=batch["prefix"]
+            )
+            logits = logits[:, batch["prefix"].shape[1]:]
+        else:
+            logits, aux = model.forward(params, tokens)
+        ce = cross_entropy(logits, labels, cfg.vocab_size, zloss=cfg.zloss,
+                           weights=wts)
+        return ce + aux, {"ce": ce, "aux": jnp.float32(aux)}
+
+    return loss_fn
+
+
+def _replicate_over_data(model, params):
+    """Constrain every param to its sharding with FSDP ('embed'/'expert'
+    over 'data') disabled -- one all-gather here instead of one per
+    micro-iteration; the transpose is a single grad reduce-scatter."""
+    from repro.models import params as pmod
+    from repro.parallel import sharding as shd
+
+    mesh = shd.active_mesh()
+    if mesh is None:
+        return params
+    rules = dict(shd.active_rules())
+    rules["embed"] = None
+    rules["expert"] = None
+
+    def one(p, axes):
+        ns = jax.sharding.NamedSharding(
+            mesh, shd.pspec(axes, rules=rules, mesh=mesh, shape=p.shape)
+        )
+        return jax.lax.with_sharding_constraint(p, ns)
+
+    return pmod.map_with_axes(one, params, model.spec())
+
+
+def make_train_step(model, run):
+    loss_fn = make_loss_fn(model, run)
+    schedule = opt.make_schedule(run)
+
+    def train_step(params, opt_state, batch):
+        if run.microbatch and run.microbatch > 1:
+            n = run.microbatch
+            mbs = jax.tree.map(
+                lambda x: x.reshape(n, x.shape[0] // n, *x.shape[1:]), batch
+            )
+            if run.gather_weights_once:
+                # grads accumulate on the hoisted (replicated) copy inside
+                # grad-of-scan; one reduce-scatter at the transpose of the
+                # constraint (EXPERIMENTS.md §Perf/2 it.3)
+                def total_loss(p):
+                    pc = _replicate_over_data(model, p)
+                    body = jax.checkpoint(
+                        lambda acc, mb: (acc + loss_fn(pc, mb)[0], None)
+                    )
+                    tot, _ = jax.lax.scan(body, jnp.float32(0.0), mbs)
+                    return tot / n
+
+                loss, grads = jax.value_and_grad(total_loss)(params)
+                metrics = {}
+            else:
+                def micro(carry, mb):
+                    gacc, lacc = carry
+                    (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                        params, mb
+                    )
+                    return (jax.tree.map(jnp.add, gacc, g), lacc + l), None
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+                (grads, ltot), _ = jax.lax.scan(micro, (zeros, 0.0), mbs)
+                grads = jax.tree.map(lambda g: g / n, grads)
+                loss = ltot / n
+                metrics = {}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+        lr = schedule(opt_state.step)
+        params, opt_state, gnorm = opt.adamw_update(
+            params, grads, opt_state, lr,
+            weight_decay=run.weight_decay, grad_clip=run.grad_clip,
+        )
+        out = {"loss": loss, "lr": lr, "grad_norm": gnorm}
+        out.update(metrics)
+        return params, opt_state, out
+
+    return train_step
+
+
+def make_eval_step(model, run):
+    loss_fn = make_loss_fn(model, run)
+
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return {"loss": loss, **metrics}
+
+    return eval_step

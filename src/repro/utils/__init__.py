@@ -1,0 +1,1 @@
+"""Utilities: roofline accounting, HLO collective parsing."""

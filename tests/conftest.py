@@ -1,0 +1,19 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def sphere_mask(n: int, r: float) -> np.ndarray:
+    g = np.arange(n) - (n - 1) / 2
+    x, y, z = np.meshgrid(g, g, g, indexing="ij")
+    return (x * x + y * y + z * z <= r * r).astype(np.float32)
+
+
+def box_mask(shape, lo, hi) -> np.ndarray:
+    m = np.zeros(shape, np.float32)
+    m[lo[0]:hi[0], lo[1]:hi[1], lo[2]:hi[2]] = 1.0
+    return m

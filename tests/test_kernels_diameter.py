@@ -1,0 +1,103 @@
+"""Pallas diameter kernel vs pure-jnp oracle: shape/dtype/variant sweeps."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import diameter, ref
+
+
+def _brute(verts, mask):
+    v = verts[mask.astype(bool)]
+    if len(v) < 2:
+        return np.zeros(4, np.float32)
+    d = v[:, None, :] - v[None, :, :]
+    q = d * d
+    qx, qy, qz = q[..., 0], q[..., 1], q[..., 2]
+    return np.sqrt(
+        np.array(
+            [
+                (qx + qy + qz).max(),
+                (qx + qy).max(),
+                (qx + qz).max(),
+                (qy + qz).max(),
+            ]
+        )
+    )
+
+
+@pytest.mark.parametrize("variant", diameter.VARIANTS)
+@pytest.mark.parametrize("M,block", [(64, 64), (100, 64), (300, 128), (513, 256)])
+def test_variants_match_bruteforce(variant, M, block):
+    rng = np.random.default_rng(M + block)
+    verts = rng.normal(size=(M, 3)).astype(np.float32) * [3.0, 7.0, 1.5]
+    mask = rng.random(M) > 0.25
+    want = _brute(verts, mask)
+    got = np.asarray(
+        diameter.max_diameters_pallas(
+            verts, mask, block=block, variant=variant, interpret=True
+        )
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64, np.float16])
+def test_dtype_cast(dtype):
+    rng = np.random.default_rng(0)
+    verts = rng.normal(size=(130, 3)).astype(dtype)
+    mask = np.ones(130, bool)
+    got = np.asarray(
+        diameter.max_diameters_pallas(verts, mask, block=128, interpret=True)
+    )
+    want = _brute(verts.astype(np.float32), mask)
+    np.testing.assert_allclose(got, want, rtol=1e-3)
+
+
+def test_ref_matches_bruteforce_blocked():
+    rng = np.random.default_rng(1)
+    verts = rng.normal(size=(777, 3)).astype(np.float32)
+    mask = rng.random(777) > 0.5
+    want = _brute(verts, mask)
+    got = np.asarray(ref.max_diameters(jnp.asarray(verts), jnp.asarray(mask), row_block=64))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_all_masked_returns_zero():
+    verts = np.zeros((64, 3), np.float32)
+    mask = np.zeros(64, bool)
+    got = np.asarray(diameter.max_diameters_pallas(verts, mask, block=64, interpret=True))
+    np.testing.assert_allclose(got, 0.0)
+
+
+def test_single_vertex_returns_zero():
+    verts = np.full((64, 3), 5.0, np.float32)
+    mask = np.zeros(64, bool)
+    mask[3] = True
+    got = np.asarray(diameter.max_diameters_pallas(verts, mask, block=64, interpret=True))
+    np.testing.assert_allclose(got, 0.0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(2, 90),
+    st.integers(0, 2**31 - 1),
+    st.sampled_from(["fused", "seqacc", "tri_prefetch"]),
+)
+def test_property_matches_bruteforce(m, seed, variant):
+    rng = np.random.default_rng(seed)
+    verts = (rng.random((m, 3)).astype(np.float32) - 0.5) * rng.integers(1, 100)
+    mask = np.ones(m, bool)
+    want = _brute(verts, mask)
+    got = np.asarray(
+        diameter.max_diameters_pallas(
+            verts, mask, block=64, variant=variant, interpret=True
+        )
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_flop_model_monotonic():
+    f_full = diameter.flop_estimate(4096, 256, "fused")
+    f_tri = diameter.flop_estimate(4096, 256, "tri")
+    f_naive = diameter.flop_estimate(4096, 256, "naive")
+    assert f_tri < f_full < f_naive

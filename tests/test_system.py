@@ -1,0 +1,222 @@
+"""End-to-end system behaviour: checkpointing, fault tolerance, trainer.
+
+These are the 'would it survive a cluster' tests: atomic checkpoint
+commit, async save, resume-after-crash, reshard-on-load / elastic remesh,
+straggler detection, SIGTERM preemption, and int8 error-feedback gradient
+compression.
+"""
+import json
+import os
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import RunConfig
+from repro.models.registry import get_config, get_model
+from repro.parallel import compression as comp
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.fault_tolerance import (
+    PreemptionHandler,
+    StragglerDetector,
+    elastic_remesh,
+    surviving_mesh,
+)
+from repro.train.trainer import Trainer
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.normal(size=(4, 8)), jnp.float32),
+        "layers": [
+            {"a": jnp.asarray(rng.normal(size=(3,)), jnp.float32)},
+            {"a": jnp.asarray(rng.normal(size=(3,)), jnp.float32)},
+        ],
+        "step": jnp.int32(7),
+    }
+
+
+def _assert_tree_equal(a, b):
+    jax.tree.map(
+        lambda x, y: np.testing.assert_array_equal(np.asarray(x), np.asarray(y)),
+        a, b,
+    )
+
+
+# --------------------------------------------------------------------------
+# checkpointing
+# --------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    m = CheckpointManager(tmp_path, keep=3)
+    t = _tree()
+    m.save(3, t, extras={"note": "hi"})
+    got, extras = m.restore(3, jax.tree.map(lambda x: x, t))
+    _assert_tree_equal(t, got)
+    assert extras == {"note": "hi"}
+
+
+def test_checkpoint_async_and_retention(tmp_path):
+    m = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        m.save_async(s, _tree(s))
+    m.wait()
+    assert m.all_steps() == [3, 4]
+    assert m.latest_step() == 4
+
+
+def test_checkpoint_atomicity_ignores_uncommitted(tmp_path):
+    m = CheckpointManager(tmp_path, keep=0)
+    m.save(5, _tree())
+    # simulate a crashed writer: step dir without the commit marker
+    bad = tmp_path / "step_00000009"
+    bad.mkdir()
+    (bad / "MANIFEST.json").write_text("{}")
+    assert m.latest_step() == 5
+
+
+def test_checkpoint_reshard_on_load(tmp_path):
+    m = CheckpointManager(tmp_path)
+    t = _tree()
+    m.save(1, t)
+    mesh = surviving_mesh(model_parallel=1)
+    sh = jax.tree.map(
+        lambda _: jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+        t,
+    )
+    step, got, _ = m.restore_latest(jax.tree.map(lambda x: x, t), sh)
+    assert step == 1
+    _assert_tree_equal(t, got)
+
+
+def test_elastic_remesh_resumes(tmp_path):
+    m = CheckpointManager(tmp_path)
+    t = _tree()
+    m.save(11, t)
+
+    def make_shardings(mesh):
+        return jax.tree.map(
+            lambda _: jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec()
+            ),
+            t,
+        )
+
+    out = elastic_remesh(m, jax.tree.map(lambda x: x, t), make_shardings)
+    assert out is not None
+    mesh, step, got, _ = out
+    assert step == 11
+    assert mesh.shape["model"] == 1
+    _assert_tree_equal(t, got)
+
+
+# --------------------------------------------------------------------------
+# fault tolerance primitives
+# --------------------------------------------------------------------------
+
+def test_straggler_detector_flags_slow_step():
+    d = StragglerDetector(window=8, threshold=2.0)
+    flagged = []
+    for i in range(20):
+        flagged.append(d.observe(i, 0.1))
+    assert not any(flagged)
+    assert d.observe(20, 0.5)  # 5x median
+    assert d.slow_steps and d.slow_steps[-1][0] == 20
+
+
+def test_preemption_handler_sigterm():
+    h = PreemptionHandler().install()
+    try:
+        assert not h.requested
+        os.kill(os.getpid(), signal.SIGTERM)
+        assert h.requested
+    finally:
+        h.uninstall()
+
+
+# --------------------------------------------------------------------------
+# gradient compression
+# --------------------------------------------------------------------------
+
+def test_compression_error_feedback_telescopes():
+    """Accumulated dequantised updates track the true gradient sum."""
+    rng = np.random.default_rng(0)
+    g_true = [jnp.asarray(rng.normal(size=(64,)), jnp.float32) for _ in range(30)]
+    err = jnp.zeros((64,), jnp.float32)
+    applied = jnp.zeros((64,), jnp.float32)
+    for g in g_true:
+        q, scale, err = comp.compress_leaf(g, err)
+        applied = applied + q.astype(jnp.float32) * scale
+    total = sum(g_true)
+    # the residual is bounded by a few quantisation steps, not 30 of them
+    resid = np.abs(np.asarray(applied - total))
+    step = float(np.max(np.abs(np.asarray(total)))) / 127.0
+    assert resid.max() <= 3.0 * step + 1e-5
+
+
+def test_compressed_psum_tree_single_worker_identity():
+    grads = {"a": jnp.linspace(-1, 1, 16), "b": jnp.ones((4, 4))}
+    err = comp.init_error_state(grads)
+    out, new_err = comp.compressed_psum_tree(grads, err)
+    for k in grads:
+        np.testing.assert_allclose(
+            np.asarray(out[k]), np.asarray(grads[k]), atol=2.0 / 127.0
+        )
+    # error feedback carries exactly the quantisation residual
+    jax.tree.map(
+        lambda g, o, e: np.testing.assert_allclose(
+            np.asarray(e), np.asarray(g - o), atol=1e-6
+        ),
+        grads, out, new_err,
+    )
+
+
+# --------------------------------------------------------------------------
+# trainer end-to-end (tiny qwen3-family config on CPU)
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = get_config("qwen3-1.7b").reduced()
+    model = get_model(cfg)
+    run = RunConfig(steps=6, checkpoint_every=2, warmup_steps=2,
+                    learning_rate=1e-3, async_checkpoint=False)
+    rng = np.random.default_rng(0)
+    B, S = 4, 32
+
+    def data_iter():
+        while True:
+            yield {
+                "tokens": jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32
+                )
+            }
+
+    return cfg, model, run, data_iter
+
+
+def test_trainer_end_to_end_and_resume(tmp_path, tiny_setup):
+    cfg, model, run, data_iter = tiny_setup
+    t1 = Trainer(model, run, data_iter(), tmp_path)
+    params, opt_state, last = t1.train(steps=4)
+    assert np.isfinite(last["loss"])
+    assert t1.ckpt.latest_step() == 4
+
+    # metrics were logged
+    lines = [json.loads(l) for l in
+             (tmp_path / "metrics.jsonl").read_text().splitlines()]
+    assert [l["step"] for l in lines] == [0, 1, 2, 3]
+
+    # a fresh Trainer resumes from step 4 (crash-restart path)
+    t2 = Trainer(model, run, data_iter(), tmp_path)
+    start, p2, o2 = t2.resume_or_init()
+    assert start == 4
+    _assert_tree_equal(p2, params)
+
+    # and continues to train to step 6
+    p3, o3, last2 = t2.train(steps=6)
+    assert t2.ckpt.latest_step() == 6
+    assert np.isfinite(last2["loss"])
