@@ -40,6 +40,24 @@ V5E = {
 }
 
 
+def diameter_projection(M: int, block: int, variant: str) -> float:
+    """Roofline seconds for one diameter-kernel configuration on a v5e.
+
+    Unlike the generic :func:`tpu_projection`, this accounts for variants
+    that split work across units: the 'gram' variant's pair sweep runs on
+    the MXU while only combo-assembly stays on the VPU, so the bound is
+    max(VPU term, MXU term, HBM term).
+    """
+    from repro.kernels import diameter as dk
+
+    fl = dk.flop_estimate(M, block, variant)
+    by = dk.bytes_estimate(M, block, variant)
+    mx = dk.mxu_flop_estimate(M, block, variant)
+    return max(
+        fl / V5E["vpu_flops"], mx / V5E["peak_flops_f32"], by / V5E["hbm_bw"]
+    )
+
+
 def tpu_projection(flops: float, bytes_hbm: float, unit: str = "vpu") -> float:
     """Roofline lower-bound seconds on one v5e chip.
 

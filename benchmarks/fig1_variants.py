@@ -11,11 +11,21 @@ across three GPUs.  Our TPU analogues (see kernels/diameter.py):
                     (the paper's 'local thread accumulators')
     tri_prefetch -- 1-D grid over upper-tri block pairs via scalar
                     prefetch (skipped blocks cost no DMA)
+    nomask       -- tri_prefetch minus the mask streams
+    gram         -- tri_prefetch schedule, pair sweep on the MXU via the
+                    augmented Gram identity (per-axis (B,3)x(3,B) products)
+    pruned+*     -- exact candidate pruning (kernels/prune.py) shrinks
+                    M -> M' first; guaranteed-identical maxima
 
-For each variant we report: structural FLOPs + HBM bytes (the dry-run
-profile), the v5e roofline projection, and measured interpret-mode wall
-time on a reduced size (execution-semantics check; absolute CPU times are
-not TPU times).  Correctness vs the jnp oracle is asserted.
+For each variant we report: measured interpret-mode wall time on a reduced
+size (execution-semantics check; absolute CPU times are not TPU times),
+structural VPU/MXU FLOPs + HBM bytes at the measured size, and the v5e
+roofline projection at the paper-scale vertex count.  Correctness vs the
+jnp oracle is asserted (the Gram path at its documented 1e-3 relative
+bound, everything else at 1e-5).
+
+``run(records=...)`` appends one dict per row -- ``benchmarks.run --json``
+serialises them as the ``BENCH_diameter.json`` perf-trajectory record.
 """
 from __future__ import annotations
 
@@ -24,8 +34,9 @@ import argparse
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row, timeit, tpu_projection
+from benchmarks.common import diameter_projection, row, timeit
 from repro.kernels import diameter as dk
+from repro.kernels import ops
 from repro.kernels import ref as ref_k
 
 
@@ -36,7 +47,49 @@ def _cloud(m: int, seed: int = 0):
     return verts, mask
 
 
-def run(m_interp: int = 2048, m_project: int = 262_144, block: int = 256):
+def _emit(rows, records, name, variant, t_s, m, m_prime, m_project,
+          block, want, got):
+    rtol = 1e-3 if variant == "gram" else 1e-5
+    np.testing.assert_allclose(got, want, rtol=rtol, atol=1e-4)
+    m_eff = ops.vertex_bucket(m_prime) if m_prime < m else m
+    fl = dk.flop_estimate(m_eff, block, variant)
+    by = dk.bytes_estimate(m_eff, block, variant)
+    mx = dk.mxu_flop_estimate(m_eff, block, variant)
+    proj_m = int(m_project * (m_prime / m)) if m_prime < m else m_project
+    proj_m = max(proj_m, block)
+    proj = diameter_projection(proj_m, block, variant)
+    rows.append(
+        row(
+            f"fig1/{name}",
+            t_s * 1e6,
+            M=m,
+            M_prime=m_prime,
+            M_project=proj_m,
+            flops=f"{fl:.3e}",
+            mxu_flops=f"{mx:.3e}",
+            hbm_bytes=f"{by:.3e}",
+            v5e_proj_ms=f"{proj * 1e3:.2f}",
+            correct="yes",
+        )
+    )
+    if records is not None:
+        records.append(
+            {
+                "name": name,
+                "variant": variant,
+                "us_per_call": t_s * 1e6,
+                "M": int(m),
+                "M_prime": int(m_prime),
+                "est_flops": fl,
+                "est_mxu_flops": mx,
+                "est_bytes": by,
+                "v5e_proj_ms": proj * 1e3,
+            }
+        )
+
+
+def run(m_interp: int = 2048, m_project: int = 262_144, block: int = 256,
+        records=None):
     verts, mask = _cloud(m_interp)
     want = np.asarray(ref_k.max_diameters(verts, mask))
     rows = []
@@ -46,25 +99,33 @@ def run(m_interp: int = 2048, m_project: int = 262_144, block: int = 256):
                 verts, mask, block=block, variant=variant, interpret=True
             )
         )
-        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
         t = timeit(
             dk.max_diameters_pallas, verts, mask,
             block=block, variant=variant, interpret=True, repeat=2,
         )
-        fl = dk.flop_estimate(m_project, block, variant)
-        by = dk.bytes_estimate(m_project, block, variant)
-        proj = tpu_projection(fl, by)
-        rows.append(
-            row(
-                f"fig1/{variant}",
-                t * 1e6,
-                M_project=m_project,
-                flops=f"{fl:.3e}",
-                hbm_bytes=f"{by:.3e}",
-                v5e_proj_ms=f"{proj * 1e3:.2f}",
-                correct="yes",
+        _emit(rows, records, variant, variant, t, m_interp, m_interp,
+              m_project, block, want, got)
+
+    # exact candidate pruning + the two best schedules: identical maxima,
+    # (M/M')^2 less pair work
+    v2, m2, info = ops.prune_candidates(np.asarray(verts), np.asarray(mask))
+    t_prune = timeit(  # variant-independent: measure once
+        lambda: ops.prune_candidates(np.asarray(verts), np.asarray(mask)),
+        repeat=2,
+    )
+    for variant in ("seqacc", "gram"):
+        got = np.asarray(
+            dk.max_diameters_pallas(
+                v2, m2, block=block, variant=variant, interpret=True
             )
         )
+        t_kernel = timeit(
+            dk.max_diameters_pallas, v2, m2,
+            block=block, variant=variant, interpret=True, repeat=2,
+        )
+        _emit(rows, records, f"pruned+{variant}", variant,
+              t_prune + t_kernel, m_interp, info.m_kept, m_project, block,
+              want, got)
     return rows
 
 

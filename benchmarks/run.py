@@ -9,10 +9,14 @@ One benchmark per paper table/figure (+ the roofline report):
     roofline -- dry-run roofline table              (EXPERIMENTS §Roofline)
 
 Prints ``name,us_per_call,derived`` CSV.  Select suites with --only.
+``--json PATH`` additionally writes a ``BENCH_diameter.json`` trajectory
+record (per-variant us_per_call, M, M', structural FLOP/byte estimates)
+from the fig1 suite, so successive PRs can track the diameter perf curve.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -24,10 +28,21 @@ def main(argv=None):
     ap.add_argument("--only", nargs="*", choices=SUITES, default=list(SUITES))
     ap.add_argument("--full", action="store_true",
                     help="table2: run all 20 cases incl. the O(M^2) giants")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the diameter perf-trajectory record here")
     args = ap.parse_args(argv)
+    if args.json is not None:
+        if "fig1" not in args.only:
+            ap.error("--json records the fig1 suite; add fig1 to --only")
+        # fail on an unwritable path BEFORE benching -- append mode so an
+        # existing trajectory record is not clobbered until the new one
+        # is ready
+        open(args.json, "a").close()
 
     print("name,us_per_call,derived")
     failures = 0
+    diameter_records: list[dict] = []
+    fig1_ok = False
     for suite in args.only:
         t0 = time.time()
         try:
@@ -36,7 +51,8 @@ def main(argv=None):
                 rows = table2_breakdown.run(full=args.full)
             elif suite == "fig1":
                 from benchmarks import fig1_variants
-                rows = fig1_variants.run()
+                rows = fig1_variants.run(records=diameter_records)
+                fig1_ok = True
             elif suite == "fig2":
                 from benchmarks import fig2_scaling
                 rows = fig2_scaling.run()
@@ -53,6 +69,22 @@ def main(argv=None):
         for r in rows:
             print(r)
         print(f"# {suite} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+    if args.json is not None:
+        if fig1_ok:
+            record = {
+                "bench": "diameter",
+                "suite": "fig1",
+                "written_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+                "rows": diameter_records,
+            }
+            with open(args.json, "w") as f:
+                json.dump(record, f, indent=1)
+            print(f"# wrote {args.json} ({len(diameter_records)} rows)",
+                  file=sys.stderr)
+        else:  # keep any previous record rather than clobber it
+            print(f"# fig1 failed; NOT overwriting {args.json}",
+                  file=sys.stderr)
     return 1 if failures else 0
 
 

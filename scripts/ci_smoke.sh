@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# CI smoke gate: the ROADMAP tier-1 test command plus a fast interpret-mode
+# benchmark pass, so regressions in kernel wiring (dispatch, autotune,
+# pruning, benchmark plumbing) fail fast.
+#
+# Usage: scripts/ci_smoke.sh
+#   SMOKE_TIER1_ONLY=1  run only @tier1-marked tests (quick local gate)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# 1) tier-1 gate (ROADMAP "Tier-1 verify"), fail-fast
+python -m pytest -x -q ${SMOKE_TIER1_ONLY:+-m tier1}
+
+# 2) kernel-wiring smoke: Fig.1 variant sweep (interpret mode) + the
+#    BENCH_diameter.json perf-trajectory record
+python -m benchmarks.run --only fig1 --json BENCH_diameter.json
+test -s BENCH_diameter.json
+echo "ci_smoke: OK"

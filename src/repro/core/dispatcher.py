@@ -51,3 +51,20 @@ def kernel_kwargs(backend: str) -> dict:
     if backend == "interpret":
         return {"interpret": True}
     raise ValueError(f"not a kernel backend: {backend!r}")
+
+
+def diameter_config(backend: str, bucket: int, variant: str = "auto",
+                    block: int | None = None):
+    """Resolve the (variant, block) the diameter kernel should run with.
+
+    ``variant='auto'`` consults the measured autotune cache for the vertex
+    bucket (``repro.runtime.autotune``); explicit values pass through, and
+    an explicitly passed ``block`` always wins over the tuned one.  For the
+    'ref' backend the choice is moot and defaults are returned.
+    """
+    from repro.runtime import autotune  # local import: avoid cycle
+
+    if variant != "auto":
+        return variant, (block or autotune.DEFAULT_CONFIG.block)
+    cfg = autotune.get_diameter_config(int(bucket), backend)
+    return cfg.variant, (block or cfg.block)

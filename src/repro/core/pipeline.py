@@ -53,22 +53,31 @@ def assign_bucket(mask_shape, n_vertices_hint=None, step=32) -> Bucket:
     return Bucket(shape, ops.vertex_bucket(n_vertices_hint))
 
 
-def _features_one(mask, spacing, vertex_cap, backend, variant):
+def _features_one(mask, spacing, vertex_cap, backend, variant, block=None):
     vol, area = ops.mc_volume_area(mask, 0.5, spacing, backend=backend)
     fields = ops.vertex_fields(mask, 0.5, spacing)
     verts, vmask, n = ops.compact_vertices(fields, vertex_cap)
-    d = ops.max_diameters(verts, vmask, backend=backend, variant=variant)
+    d = ops.max_diameters(
+        verts, vmask, backend=backend, variant=variant, block=block
+    )
     return jnp.concatenate(
         [jnp.stack([vol, area]), d, jnp.asarray([n], jnp.float32)]
     )  # (7,)
 
 
 class BatchedExtractor:
-    """Vectorised multi-case extraction, optionally sharded over a mesh."""
+    """Vectorised multi-case extraction, optionally sharded over a mesh.
+
+    ``variant='auto'`` (default) resolves the measured-best diameter
+    (variant, block) once per bucket from the autotune cache -- the whole
+    batch then compiles against the tuned configuration.  (Exact vertex
+    pruning is a single-case optimisation: batched shapes are static, so
+    the O(M'^2) saving cannot be realised inside ``lax.map``.)
+    """
 
     N_FEATURES = 7  # [vol, area, d3, dxy, dxz, dyz, n_vertices]
 
-    def __init__(self, backend=None, variant="seqacc", mesh: Mesh | None = None,
+    def __init__(self, backend=None, variant="auto", mesh: Mesh | None = None,
                  data_axis: str = "data"):
         self.backend = dispatcher.resolve_backend(backend)
         self.variant = variant
@@ -81,10 +90,15 @@ class BatchedExtractor:
             return self._compiled[bucket]
         backend, variant = self.backend, self.variant
         cap = bucket.vertex_cap
+        block = None
+        if backend != "ref":
+            # resolve the tuned config OUTSIDE the traced function: the
+            # sweep runs real kernels and must not happen mid-trace
+            variant, block = dispatcher.diameter_config(backend, cap, variant)
 
         def one(args):
             mask, spacing = args
-            return _features_one(mask, spacing, cap, backend, variant)
+            return _features_one(mask, spacing, cap, backend, variant, block)
 
         def batch(masks, spacings):
             return jax.lax.map(one, (masks, spacings))

@@ -95,14 +95,26 @@ def _voxel_stats(mask, spacing):
 
 
 class ShapeFeatureExtractor:
-    """Drop-in 3D shape feature extractor with accelerator dispatch."""
+    """Drop-in 3D shape feature extractor with accelerator dispatch.
 
-    def __init__(self, backend: str | None = None, diameter_variant: str = "seqacc",
-                 mc_block=(8, 8, 8), diam_block: int = 256):
+    ``diameter_variant='auto'`` (the default) picks the measured-best
+    (variant, block) for the case's vertex bucket from the autotune cache
+    (``repro.runtime.autotune``); pass a concrete variant to pin it.
+    ``prune=True`` runs the exact candidate pruning stage
+    (``repro.kernels.prune``) before the O(M^2) pair sweep -- identical
+    diameters (bit-for-bit on the Pallas variants, up to f32 rounding on
+    the ref path), usually at a fraction of the pair work.
+    """
+
+    def __init__(self, backend: str | None = None, diameter_variant: str = "auto",
+                 mc_block=(8, 8, 8), diam_block: int | None = None,
+                 prune: bool = True):
         self.backend = dispatcher.resolve_backend(backend)
         self.diameter_variant = diameter_variant
         self.mc_block = tuple(mc_block)
         self.diam_block = diam_block
+        self.prune = prune
+        self.last_prune_info = None  # PruneInfo of the most recent case
 
     # -- staged API (used by the Table-2 benchmark harness) ----------------
     def mesh_features(self, mask_padded, spacing):
@@ -116,6 +128,11 @@ class ShapeFeatureExtractor:
         n = int(ops.count_vertices(fields))
         cap = ops.vertex_bucket(n)
         verts, vmask, _ = ops.compact_vertices(fields, cap)
+        self.last_prune_info = None
+        if self.prune:
+            verts, vmask, self.last_prune_info = ops.prune_candidates(
+                np.asarray(verts), np.asarray(vmask)
+            )
         d = ops.max_diameters(
             verts, vmask, backend=self.backend,
             variant=self.diameter_variant, block=self.diam_block,

@@ -28,6 +28,24 @@ Optimization variants (the TPU analogue of the paper's Fig. 1 study):
                triangle block pairs, with the (i, j) schedule delivered via
                scalar prefetch so skipped blocks cost neither DMA nor compute
                -- the TPU-native version of CUDA early-exit load balancing.
+    'nomask' : tri_prefetch without the mask streams: invalid slots are
+               pre-filled with the first valid vertex, so the mask DMA and
+               the per-pair select disappear.
+    'gram'   : tri_prefetch schedule, but the per-tile pair distances are
+               computed on the MXU via the (augmented) Gram identity
+                   |r_i - c_j|^2 = |r_i|^2 + |c_j|^2 - 2 <r_i, c_j>
+               realised per axis as [r^2, 1, -2r] @ [1, c^2, c]^T -- the
+               rank-1 cross term and both norm terms ride in one per-axis
+               (B,3)x(3,B) product, batched over the 3 axes into a single
+               ``dot_general``.  The per-axis products stay separate, so
+               all 4 combos (3D/xy/xz/yz) are served from the same 3 MXU
+               products; the VPU only does combo adds + select + max, not
+               the subtract-square sweep.
+
+Exact candidate pruning (``repro.kernels.prune``) can shrink M -> M' before
+any variant runs; the result is guaranteed identical (the farthest pair per
+combo always survives).  ``repro.runtime.autotune`` sweeps (variant, block)
+per vertex bucket and caches the measured winner.
 
 Coordinates are stored SoA as (3, M) (the paper's '1D arrays' layout): the
 lane dimension is the vertex index, so loads are contiguous 128-lane vectors.
@@ -43,7 +61,10 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG = np.float32(-1e30)
-VARIANTS = ("naive", "fused", "tri", "seqacc", "tri_prefetch", "nomask")
+VARIANTS = ("naive", "fused", "tri", "seqacc", "tri_prefetch", "nomask", "gram")
+
+# variants scheduled on the triangular scalar-prefetch 1-D grid
+_PREFETCH_VARIANTS = ("tri_prefetch", "gram")
 
 
 def _pairwise_combos(rows, cols, rmask, cmask, combos):
@@ -62,6 +83,40 @@ def _pairwise_combos(rows, cols, rmask, cmask, combos):
 
 
 _ALL_COMBOS = ((0, 1, 2), (0, 1), (0, 2), (1, 2))  # 3D, xy, xz, yz
+
+
+def _pairwise_combos_gram(rows, cols, rmask, cmask, combos):
+    """(len(combos),) tile maxima via the augmented Gram identity (MXU).
+
+    Per axis a, the whole (B, B) squared-difference matrix is ONE K=3
+    matrix product: with l = [r^2, 1, -2r] (B, 3) and m = [1, c^2, c]^T
+    (3, B),
+
+        (l @ m)[i, j] = r_i^2 + c_j^2 - 2 r_i c_j = (r_i - c_j)^2,
+
+    i.e. the norm terms of |r|^2 + |c|^2 - 2<r, c> ride in the same
+    per-axis (B,3)x(3,B) ``dot_general`` as the rank-1 cross term.  The
+    three axis products are batched into a single call and kept separate,
+    so all 4 combos (3D/xy/xz/yz) are served from the same 3 MXU products;
+    the VPU only does the per-combo adds + select + max, not the
+    subtract-square sweep.
+    """
+    ones = jnp.ones_like(rows)
+    lhs = jnp.stack([rows * rows, ones, -2.0 * rows], axis=-1)  # (3, B, 3)
+    rhs = jnp.stack([ones, cols * cols, cols], axis=1)  # (3, 3, B)
+    q = jax.lax.dot_general(
+        lhs,
+        rhs,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )  # (3, B, B): per-axis squared differences
+    valid = (rmask[0][:, None] > 0.0) & (cmask[0][None, :] > 0.0)
+    outs = []
+    for combo in combos:
+        s = functools.reduce(lambda x, y: x + y, [q[a] for a in combo])
+        s = jnp.where(valid, s, NEG)
+        outs.append(jnp.max(s))
+    return jnp.stack(outs)
 
 
 def _kernel_partial(vr, mr, vc, mc, out, *, combos, triangular):
@@ -92,14 +147,14 @@ def _kernel_seqacc(vr, mr, vc, mc, out, *, combos):
         out[0, :] = jnp.maximum(out[0, :], part)
 
 
-def _kernel_tri_prefetch(ij_ref, vr, mr, vc, mc, out, *, combos):
+def _kernel_tri_prefetch(ij_ref, vr, mr, vc, mc, out, *, combos, tile_fn):
     t = pl.program_id(0)
 
     @pl.when(t == 0)
     def _():
         out[0, :] = jnp.full((len(combos),), NEG)
 
-    part = _pairwise_combos(vr[:], vc[:], mr[:], mc[:], combos)
+    part = tile_fn(vr[:], vc[:], mr[:], mc[:], combos)
     out[0, :] = jnp.maximum(out[0, :], part)
 
 
@@ -226,10 +281,13 @@ def max_diameters_sq_pallas(
             interpret=interpret,
         )(v, m, v, m)
         best = out[0]
-    else:  # tri_prefetch
+    else:  # tri_prefetch / gram: triangular scalar-prefetch schedule
         ii, jj = np.triu_indices(nb)
         nsteps = len(ii)
         ij = jnp.asarray(np.stack([ii, jj]).astype(np.int32))  # (2, T)
+        tile_fn = (
+            _pairwise_combos_gram if variant == "gram" else _pairwise_combos
+        )
 
         grid_spec = pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
@@ -243,7 +301,9 @@ def max_diameters_sq_pallas(
             out_specs=pl.BlockSpec((1, nc), lambda t, ij: (0, 0)),
         )
         out = pl.pallas_call(
-            functools.partial(_kernel_tri_prefetch, combos=combos),
+            functools.partial(
+                _kernel_tri_prefetch, combos=combos, tile_fn=tile_fn
+            ),
             grid_spec=grid_spec,
             out_shape=jax.ShapeDtypeStruct((1, nc), jnp.float32),
             interpret=interpret,
@@ -258,7 +318,12 @@ def max_diameters_pallas(verts, mask, **kw):
 
 
 def flop_estimate(M: int, block: int, variant: str) -> float:
-    """Structural cost model used by the §Perf iteration log."""
+    """Structural VPU cost model used by the §Perf iteration log.
+
+    For 'gram' this counts only the vector-unit work (combo assembly, mask
+    select, max-reduce); the subtract-square sweep moved to the matrix unit
+    and is reported separately by :func:`mxu_flop_estimate`.
+    """
     nb = -(-M // block)
     if variant in ("naive",):
         tiles = nb * nb * 4
@@ -269,10 +334,23 @@ def flop_estimate(M: int, block: int, variant: str) -> float:
     elif variant == "nomask":  # no valid-mask compare/select per combo
         tiles = nb * (nb + 1) // 2
         per_tile = block * block * (3 * 2 + 5 + 4)
+    elif variant == "gram":  # per-pair: combo adds + select + max only
+        tiles = nb * (nb + 1) // 2
+        per_tile = block * block * (5 + 4 + 4)
     else:  # tri / seqacc / tri_prefetch
         tiles = nb * (nb + 1) // 2
         per_tile = block * block * (3 * 2 + 5 + 1 + 4 + 4)
     return float(tiles) * per_tile
+
+
+def mxu_flop_estimate(M: int, block: int, variant: str) -> float:
+    """Matrix-unit FLOPs: 3 axis-batched K=3 (B,3)x(3,B) products per tile
+    ('gram' only): 3 * 2*3*B^2."""
+    if variant != "gram":
+        return 0.0
+    nb = -(-M // block)
+    tiles = nb * (nb + 1) // 2
+    return float(tiles) * (3 * 2.0 * 3 * block * block)
 
 
 def bytes_estimate(M: int, block: int, variant: str) -> float:

@@ -6,8 +6,11 @@ kernel, its interpret-mode twin, or the pure-jnp reference path.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import dispatcher
 from repro.kernels import diameter as _diam
@@ -31,17 +34,56 @@ def mc_volume_area(vol, iso=0.5, spacing=(1.0, 1.0, 1.0), *, backend=None, **kw)
 
 
 def max_diameters(verts, mask, *, backend=None, **kw):
-    """(4,) [3D, Slice(xy), Row(xz), Column(yz)] max diameters."""
+    """(4,) [3D, Slice(xy), Row(xz), Column(yz)] max diameters.
+
+    ``variant='auto'`` resolves (variant, block) from the autotune cache
+    for this vertex bucket (see ``repro.runtime.autotune``).
+    """
     b = dispatcher.resolve_backend(backend)
     if b == "ref":
         return _ref.max_diameters(verts, mask, row_block=kw.get("row_block", 128))
+    variant, block = dispatcher.diameter_config(
+        b, verts.shape[0], kw.get("variant", "seqacc"), kw.get("block")
+    )
     return _diam.max_diameters_pallas(
         verts,
         mask,
-        block=kw.get("block", 256),
-        variant=kw.get("variant", "seqacc"),
+        block=block,
+        variant=variant,
         **dispatcher.kernel_kwargs(b),
     )
+
+
+def prune_candidates(verts, mask, k_dirs: int = 16):
+    """Exact host-side candidate pruning + re-bucketing for the pair sweep.
+
+    Shrinks the vertex list to the provably-sufficient candidate set
+    (identical diameters: bit-for-bit on the Pallas variants, up to f32
+    rounding on the ref path -- see ``repro.kernels.prune``), then
+    pads it back up to the M' vertex bucket.  Returns
+    ``(verts', mask', info)``; on degenerate inputs the originals come
+    back unchanged.
+    """
+    from repro.kernels import prune as _prune
+
+    v2, m2, info = _prune.prune_vertices(verts, mask, k_dirs=k_dirs)
+    if not info.pruned:
+        return v2, m2, info
+    cap = vertex_bucket(info.m_kept)
+    if cap >= info.m_total:
+        # the survivor bucket (>= 512 floor) is no smaller than the input,
+        # so re-bucketing would not shrink the padded pair sweep -- keep
+        # the originals and report the stage as a no-op
+        return (
+            np.asarray(verts, np.float32),
+            np.asarray(mask).astype(bool),
+            dataclasses.replace(info, m_kept=info.m_valid, pruned=False),
+        )
+    pad = cap - len(v2)
+    if pad > 0:
+        v2 = np.pad(v2, ((0, pad), (0, 0)))
+        m2 = np.pad(m2, (0, pad))
+    return v2, m2, info
 
 
 def vertex_fields(vol, iso=0.5, spacing=(1.0, 1.0, 1.0), origin=(0.0, 0.0, 0.0)):

@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.parallel import sharding
+
 
 def pipeline_stages(n_layers: int, n_stages: int):
     """Evenly partition layers into contiguous stages."""
@@ -123,7 +125,7 @@ def pipeline_forward(layer_fn, params_stacked, x, mesh, *, n_micro: int,
         params_stacked,
     )
 
-    shmap = jax.shard_map(
+    shmap = sharding.shard_map_compat(
         run,
         mesh=mesh,
         in_specs=(
@@ -131,7 +133,7 @@ def pipeline_forward(layer_fn, params_stacked, x, mesh, *, n_micro: int,
             P(),  # microbatches replicated in; stage 0 reads them
         ),
         out_specs=P(),
-        check_vma=False,
+        check=False,
     )
     out = shmap(jax.tree.map(lambda p: p, staged), micro)
     return out.reshape(b, s, d)

@@ -60,6 +60,27 @@ class _Ctx(threading.local):
 _CTX = _Ctx()
 
 
+def shard_map_compat(f, mesh, in_specs, out_specs, check: bool = True):
+    """``shard_map`` across jax versions.
+
+    Newer jax exposes ``jax.shard_map`` (replication check kwarg
+    ``check_vma``); 0.4.x has it under ``jax.experimental.shard_map`` with
+    ``check_rep``.  All repo call sites go through this wrapper.  ``check``
+    defaults to True like jax itself; pass False only where the checker
+    rejects a legitimate program (e.g. the gpipe ppermute loop).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check
+    )
+
+
 @contextlib.contextmanager
 def use_mesh(mesh: Mesh | None, rules: dict | None = None):
     """Activate a mesh + ruleset for logical constraints and pspec lookup."""

@@ -1,0 +1,211 @@
+"""Measured (variant, block) selection for the diameter kernel.
+
+The Fig.1-style variant study shows no single (variant, block) wins at
+every vertex count: small buckets want one big block (grid overhead), large
+buckets want the triangular prefetch schedule or the MXU 'gram' path.  This
+module turns that study into infrastructure: per vertex *bucket* (the
+static padding cap from ``ops.vertex_bucket``) it sweeps the candidate
+configurations once on the resolved backend, caches the winner in a JSON
+file, and hands the cached choice to every later call -- the TPU analogue
+of a CUDA occupancy/launch-bound autotuner.
+
+Cache: one JSON object keyed ``"diameter/<backend>/M<bucket>"`` holding the
+winning variant/block plus the full measured table (microseconds), so the
+sweep is also a persisted perf trajectory.  The path comes from
+``REPRO_AUTOTUNE_CACHE`` (default ``~/.cache/repro_autotune.json``); writes
+are atomic (tmp + rename) so concurrent processes at worst re-measure.
+
+Sweeping policy: measured sweeps run by default only on the compiled
+``pallas`` backend.  ``interpret`` is a correctness backend -- Python timings
+there are meaningless for TPU choices -- so it uses the default config
+unless ``REPRO_AUTOTUNE=1`` forces a sweep (used by tests to exercise the
+round-trip) ; ``REPRO_AUTOTUNE=0`` disables sweeping everywhere.  The
+``ref`` backend has no (variant, block) axis at all.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+DEFAULT_VARIANTS = ("seqacc", "tri_prefetch", "nomask", "gram")
+DEFAULT_BLOCKS = (128, 256, 512)
+
+
+@dataclasses.dataclass(frozen=True)
+class DiameterConfig:
+    variant: str
+    block: int
+
+
+DEFAULT_CONFIG = DiameterConfig("seqacc", 256)
+
+
+def cache_path() -> str:
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro_autotune.json")
+
+
+class AutotuneCache:
+    """Tiny JSON key->record store with atomic writes."""
+
+    def __init__(self, path: str | None = None):
+        self.path = path or cache_path()
+
+    def _read(self) -> dict:
+        try:
+            with open(self.path) as f:
+                return json.load(f)
+        except (OSError, ValueError):
+            return {}
+
+    def get(self, key: str):
+        return self._read().get(key)
+
+    def put(self, key: str, record: dict) -> None:
+        data = self._read()
+        data[key] = record
+        d = os.path.dirname(self.path) or "."
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(data, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except OSError:  # pragma: no cover - cache is best-effort
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+
+
+def sweep_key(bucket: int, backend: str) -> str:
+    return f"diameter/{backend}/M{int(bucket)}"
+
+
+def measure_diameter_config(
+    bucket: int,
+    backend: str,
+    variant: str,
+    block: int,
+    *,
+    repeat: int = 2,
+    warmup: int = 1,
+    seed: int = 0,
+) -> float:
+    """Best-of-``repeat`` wall-clock seconds for one configuration."""
+    from repro.core import dispatcher
+    from repro.kernels import diameter as dk
+
+    rng = np.random.default_rng(seed)
+    verts = np.asarray(rng.normal(size=(bucket, 3)) * 10.0, np.float32)
+    mask = np.ones((bucket,), np.float32)
+    kw = dispatcher.kernel_kwargs(backend)
+
+    def call():
+        return dk.max_diameters_sq_pallas(
+            verts, mask, block=block, variant=variant, **kw
+        )
+
+    for _ in range(warmup):
+        jax.block_until_ready(call())
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(call())
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def sweep_diameter(
+    bucket: int,
+    backend: str,
+    *,
+    variants=DEFAULT_VARIANTS,
+    blocks=DEFAULT_BLOCKS,
+    repeat: int = 2,
+):
+    """Measure every (variant, block) candidate; returns (best, table).
+
+    ``table`` maps ``"variant/block"`` to measured microseconds.  Blocks
+    larger than the bucket only pad the grid, so they are dropped (the
+    smallest candidate block is clamped in instead when all are too big).
+    """
+    usable = [b for b in blocks if b <= bucket] or [min(min(blocks), bucket)]
+    table: dict[str, float] = {}
+    best, best_t = None, float("inf")
+    for variant in variants:
+        for block in usable:
+            t = measure_diameter_config(
+                bucket, backend, variant, block, repeat=repeat
+            )
+            table[f"{variant}/{block}"] = t * 1e6
+            if t < best_t:
+                best, best_t = DiameterConfig(variant, block), t
+    return best, table
+
+
+def _sweep_allowed(backend: str) -> bool:
+    flag = os.environ.get("REPRO_AUTOTUNE")
+    if flag == "0":
+        return False
+    if flag == "1":
+        return True
+    return backend == "pallas"  # interpret timings don't transfer to TPU
+
+
+def get_diameter_config(
+    bucket: int,
+    backend: str,
+    *,
+    cache: AutotuneCache | None = None,
+    variants=DEFAULT_VARIANTS,
+    blocks=DEFAULT_BLOCKS,
+    repeat: int = 2,
+) -> DiameterConfig:
+    """Cached-or-swept best (variant, block) for a vertex bucket.
+
+    The fast path is a cache hit -- no kernel runs at all.  A miss sweeps
+    (when allowed, see module docstring), persists the winner + table, and
+    returns it; when sweeping is disallowed the default config is returned
+    without being cached (so a later TPU run can still measure).
+    """
+    from repro.kernels import diameter as dk
+
+    if backend == "ref":
+        return DEFAULT_CONFIG
+    cache = cache or AutotuneCache()
+    key = sweep_key(bucket, backend)
+    hit = cache.get(key)
+    if hit is not None:
+        # validate: the persistent cache can outlive a rename/removal of a
+        # variant (or be malformed) -- treat anything unusable as a miss
+        try:
+            cfg = DiameterConfig(str(hit["variant"]), int(hit["block"]))
+        except (KeyError, TypeError, ValueError):
+            cfg = None
+        if cfg is not None and cfg.variant in dk.VARIANTS and cfg.block > 0:
+            return cfg
+    if not _sweep_allowed(backend):
+        return DEFAULT_CONFIG
+    best, table = sweep_diameter(
+        bucket, backend, variants=variants, blocks=blocks, repeat=repeat
+    )
+    cache.put(
+        key,
+        {
+            "variant": best.variant,
+            "block": best.block,
+            "us": table[f"{best.variant}/{best.block}"],
+            "table": table,
+            "swept_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        },
+    )
+    return best

@@ -18,6 +18,7 @@ SCRIPT = textwrap.dedent(
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
     from repro.parallel import compression as comp
+    from repro.parallel.sharding import shard_map_compat
 
     mesh = jax.make_mesh((4,), ("data",))
     rng = np.random.default_rng(0)
@@ -28,8 +29,9 @@ SCRIPT = textwrap.dedent(
                                             axis_name="data")
         return out["g"], ne["g"]
 
-    shmap = jax.shard_map(sync, mesh=mesh, in_specs=(P("data"), P("data")),
-                          out_specs=(P("data"), P("data")))
+    shmap = shard_map_compat(sync, mesh=mesh,
+                             in_specs=(P("data"), P("data")),
+                             out_specs=(P("data"), P("data")))
 
     err = jnp.zeros((4, 64), jnp.float32)
     acc = jnp.zeros((64,), jnp.float32)

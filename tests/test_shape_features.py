@@ -12,6 +12,8 @@ from repro.core import ShapeFeatureExtractor, crop_to_roi
 from repro.data import synthetic
 from conftest import sphere_mask, box_mask
 
+pytestmark = pytest.mark.tier1
+
 KEYS = [
     "MeshVolume", "VoxelVolume", "SurfaceArea", "SurfaceVolumeRatio",
     "Sphericity", "Compactness1", "Compactness2", "SphericalDisproportion",
