@@ -3,10 +3,16 @@
 The paper's motivating workload is ~40 000 CT scans on a cluster (xLUNGS);
 its discussion notes that for complete workflows data loading dominates
 small cases and DMA/compute overlap is the open opportunity.  This
-benchmark runs the BatchedExtractor (bucketed compile cache, double-
-buffered host->device feeding, optional data-axis sharding) over a batch
-of synthetic cases and reports cases/second, plus the single-case loop for
-comparison -- the throughput story GPU/TPU acceleration exists to serve.
+benchmark runs the BatchedExtractor over a batch of synthetic cases in
+three modes -- the single-case loop, the legacy one-pass batched pipeline
+(no pruning: the unpruned baseline), and the two-pass pruned pipeline
+(pass 1: vmapped exact pruning bound; pass 2: re-bucketed by M') -- and
+reports cases/second for each, the throughput story GPU/TPU acceleration
+exists to serve.
+
+``run(records=...)`` appends one dict per mode; ``benchmarks.run
+--json-pipeline`` serialises them as the ``BENCH_pipeline.json``
+perf-trajectory record (pruned vs unpruned cases/sec across PRs).
 """
 from __future__ import annotations
 
@@ -25,7 +31,7 @@ def _cases(n: int, dims=(48, 48, 48)):
     return [make_case(dims, seed=100 + i) for i in range(n)]
 
 
-def run(n_cases: int = 12):
+def run(n_cases: int = 12, records=None):
     cases = _cases(n_cases)
     rows = []
 
@@ -35,27 +41,49 @@ def run(n_cases: int = 12):
         ext.execute(img, msk, sp)
     t_loop = time.perf_counter() - t0
 
-    bx = BatchedExtractor(backend="ref")
-    results, stats = bx.run(cases)
-    assert all(r is not None for r in results)
+    unpruned = BatchedExtractor(backend="ref", prune=False)
+    res_u, stats_u = unpruned.run(cases)
+    pruned = BatchedExtractor(backend="ref", prune=True)
+    res_p, stats_p = pruned.run(cases)
+    assert all(r is not None for r in res_u + res_p)
+    for a, b in zip(res_u, res_p):  # pruning must not move the features
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
 
-    rows.append(
-        row(
-            "pipeline/single_case_loop",
-            t_loop / n_cases * 1e6,
-            cases=n_cases,
-            cases_per_s=f"{n_cases / t_loop:.2f}",
+    def emit(name, seconds, stats=None, **extra):
+        derived = dict(
+            cases=n_cases, cases_per_s=f"{n_cases / seconds:.2f}", **extra
         )
+        rows.append(row(f"pipeline/{name}", seconds / n_cases * 1e6, **derived))
+        if records is not None:
+            rec = {
+                "name": name,
+                "cases": n_cases,
+                "seconds": seconds,
+                "cases_per_second": n_cases / seconds,
+            }
+            if stats is not None:
+                rec.update(
+                    buckets=stats["buckets"],
+                    vertex_buckets=stats["vertex_buckets"],
+                    pruned_cases=stats["pruned_cases"],
+                    mean_keep_fraction=stats["mean_keep_fraction"],
+                    prune_seconds=stats["prune_seconds"],
+                )
+            records.append(rec)
+
+    emit("single_case_loop", t_loop)
+    emit(
+        "batched_unpruned", stats_u["seconds"], stats_u,
+        buckets=stats_u["buckets"],
+        speedup_vs_loop=f"{t_loop / stats_u['seconds']:.2f}",
     )
-    rows.append(
-        row(
-            "pipeline/batched",
-            stats["seconds"] / n_cases * 1e6,
-            cases=n_cases,
-            cases_per_s=f"{stats['cases_per_second']:.2f}",
-            buckets=stats["buckets"],
-            speedup_vs_loop=f"{t_loop / stats['seconds']:.2f}",
-        )
+    emit(
+        "batched_two_pass_pruned", stats_p["seconds"], stats_p,
+        buckets=stats_p["buckets"],
+        vertex_buckets=stats_p["vertex_buckets"],
+        keep_frac=f"{stats_p['mean_keep_fraction']:.3f}",
+        speedup_vs_loop=f"{t_loop / stats_p['seconds']:.2f}",
+        speedup_vs_unpruned=f"{stats_u['seconds'] / stats_p['seconds']:.2f}",
     )
     return rows
 

@@ -11,7 +11,10 @@ One benchmark per paper table/figure (+ the roofline report):
 Prints ``name,us_per_call,derived`` CSV.  Select suites with --only.
 ``--json PATH`` additionally writes a ``BENCH_diameter.json`` trajectory
 record (per-variant us_per_call, M, M', structural FLOP/byte estimates)
-from the fig1 suite, so successive PRs can track the diameter perf curve.
+from the fig1 suite, and ``--json-pipeline PATH`` a ``BENCH_pipeline.json``
+record (cases/sec for the single loop, the unpruned batched baseline, and
+the two-pass pruned pipeline) from the pipeline suite, so successive PRs
+can track both perf curves.
 """
 from __future__ import annotations
 
@@ -23,6 +26,21 @@ import time
 SUITES = ("table2", "fig1", "fig2", "pipeline", "roofline")
 
 
+def _write_record(path: str, bench: str, suite: str, rows: list, ok: bool):
+    if ok:
+        record = {
+            "bench": bench,
+            "suite": suite,
+            "written_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "rows": rows,
+        }
+        with open(path, "w") as f:
+            json.dump(record, f, indent=1)
+        print(f"# wrote {path} ({len(rows)} rows)", file=sys.stderr)
+    else:  # keep any previous record rather than clobber it
+        print(f"# {suite} failed; NOT overwriting {path}", file=sys.stderr)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", choices=SUITES, default=list(SUITES))
@@ -30,19 +48,26 @@ def main(argv=None):
                     help="table2: run all 20 cases incl. the O(M^2) giants")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write the diameter perf-trajectory record here")
+    ap.add_argument("--json-pipeline", metavar="PATH", default=None,
+                    help="write the batched-throughput trajectory record here")
     args = ap.parse_args(argv)
-    if args.json is not None:
-        if "fig1" not in args.only:
-            ap.error("--json records the fig1 suite; add fig1 to --only")
-        # fail on an unwritable path BEFORE benching -- append mode so an
-        # existing trajectory record is not clobbered until the new one
-        # is ready
-        open(args.json, "a").close()
+    if args.json is not None and "fig1" not in args.only:
+        ap.error("--json records the fig1 suite; add fig1 to --only")
+    if args.json_pipeline is not None and "pipeline" not in args.only:
+        ap.error("--json-pipeline records the pipeline suite; add pipeline "
+                 "to --only")
+    for path in (args.json, args.json_pipeline):
+        if path is not None:
+            # fail on an unwritable path BEFORE benching -- append mode so
+            # an existing trajectory record is not clobbered until the new
+            # one is ready
+            open(path, "a").close()
 
     print("name,us_per_call,derived")
     failures = 0
     diameter_records: list[dict] = []
-    fig1_ok = False
+    pipeline_records: list[dict] = []
+    fig1_ok = pipeline_ok = False
     for suite in args.only:
         t0 = time.time()
         try:
@@ -58,7 +83,8 @@ def main(argv=None):
                 rows = fig2_scaling.run()
             elif suite == "pipeline":
                 from benchmarks import pipeline_throughput
-                rows = pipeline_throughput.run()
+                rows = pipeline_throughput.run(records=pipeline_records)
+                pipeline_ok = True
             else:
                 from benchmarks import roofline_report
                 rows = roofline_report.run()
@@ -71,20 +97,10 @@ def main(argv=None):
         print(f"# {suite} done in {time.time() - t0:.1f}s", file=sys.stderr)
 
     if args.json is not None:
-        if fig1_ok:
-            record = {
-                "bench": "diameter",
-                "suite": "fig1",
-                "written_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
-                "rows": diameter_records,
-            }
-            with open(args.json, "w") as f:
-                json.dump(record, f, indent=1)
-            print(f"# wrote {args.json} ({len(diameter_records)} rows)",
-                  file=sys.stderr)
-        else:  # keep any previous record rather than clobber it
-            print(f"# fig1 failed; NOT overwriting {args.json}",
-                  file=sys.stderr)
+        _write_record(args.json, "diameter", "fig1", diameter_records, fig1_ok)
+    if args.json_pipeline is not None:
+        _write_record(args.json_pipeline, "pipeline", "pipeline",
+                      pipeline_records, pipeline_ok)
     return 1 if failures else 0
 
 

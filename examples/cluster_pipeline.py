@@ -30,6 +30,8 @@ def main():
     ap.add_argument("--cases", type=int, default=16)
     ap.add_argument("--out", default="/tmp/repro_pipeline/features.jsonl")
     ap.add_argument("--variant", default="seqacc")
+    ap.add_argument("--no-prune", action="store_true",
+                    help="legacy one-pass pipeline (no exact pruning)")
     args = ap.parse_args()
 
     out = Path(args.out)
@@ -53,7 +55,9 @@ def main():
         print("nothing to do")
         return
 
-    ext = BatchedExtractor(variant=args.variant)  # mesh=None: single device
+    ext = BatchedExtractor(  # mesh=None: single device
+        variant=args.variant, prune=not args.no_prune
+    )
     results, stats = ext.run(cases, batch_size=4)
 
     with out.open("a") as f:
@@ -63,7 +67,11 @@ def main():
             f.write(json.dumps(rec) + "\n")
     print(f"extracted {stats['cases']} cases in {stats['seconds']:.1f}s "
           f"({stats['cases_per_second']:.2f} cases/s, "
-          f"{stats['buckets']} compile buckets)")
+          f"{stats['buckets']} shape buckets, "
+          f"{stats['vertex_buckets']} vertex buckets)")
+    if stats["two_pass"]:
+        print(f"two-pass pruning: {stats['pruned_cases']} cases shrunk, "
+              f"mean keep fraction {stats['mean_keep_fraction']:.3f}")
     print(f"manifest: {out}")
 
 

@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # CI smoke gate: the ROADMAP tier-1 test command plus a fast interpret-mode
 # benchmark pass, so regressions in kernel wiring (dispatch, autotune,
-# pruning, benchmark plumbing) fail fast.
+# pruning, batched pipeline, benchmark plumbing) fail fast.
 #
 # Usage: scripts/ci_smoke.sh
 #   SMOKE_TIER1_ONLY=1  run only @tier1-marked tests (quick local gate)
@@ -12,8 +12,19 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # 1) tier-1 gate (ROADMAP "Tier-1 verify"), fail-fast
 python -m pytest -x -q ${SMOKE_TIER1_ONLY:+-m tier1}
 
-# 2) kernel-wiring smoke: Fig.1 variant sweep (interpret mode) + the
+# 2) two-pass pruned-batch parity + autotune-cache gates: named explicitly
+#    (under the tier1 marker) so the batched==single contract and the cache
+#    schema can never silently fall out of the gate
+python -m pytest -q -m tier1 tests/test_pipeline_pruned_batch.py \
+    tests/test_autotune_cache.py
+
+# 3) kernel-wiring smoke: Fig.1 variant sweep (interpret mode) + the
 #    BENCH_diameter.json perf-trajectory record
 python -m benchmarks.run --only fig1 --json BENCH_diameter.json
 test -s BENCH_diameter.json
+
+# 4) batched-throughput smoke: single loop vs unpruned vs two-pass pruned
+#    cases/sec, recorded as the BENCH_pipeline.json trajectory
+python -m benchmarks.run --only pipeline --json-pipeline BENCH_pipeline.json
+test -s BENCH_pipeline.json
 echo "ci_smoke: OK"

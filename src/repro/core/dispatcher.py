@@ -68,3 +68,26 @@ def diameter_config(backend: str, bucket: int, variant: str = "auto",
         return variant, (block or autotune.DEFAULT_CONFIG.block)
     cfg = autotune.get_diameter_config(int(bucket), backend)
     return cfg.variant, (block or cfg.block)
+
+
+def mc_config(backend: str, shape, block="auto", chunk: int | None = None):
+    """Resolve the (brick, chunk) the marching-cubes kernel should run with.
+
+    ``block='auto'`` consults the measured autotune cache for the padded-
+    volume bucket of ``shape`` (``repro.runtime.autotune``); explicit values
+    pass through, and an explicitly passed ``chunk`` always wins over the
+    tuned one.  For the 'ref' backend the choice is moot and defaults are
+    returned.  Like ``diameter_config`` this may run a measuring sweep, so
+    call it OUTSIDE any traced function.
+    """
+    from repro.runtime import autotune  # local import: avoid cycle
+
+    if block is not None and block != "auto":
+        return tuple(block), int(chunk or autotune.DEFAULT_MC_CONFIG.chunk)
+    if backend == "ref":
+        cfg = autotune.DEFAULT_MC_CONFIG
+    else:
+        cfg = autotune.get_mc_config(
+            autotune.mc_shape_bucket(shape), backend
+        )
+    return cfg.block, int(chunk or cfg.chunk)

@@ -97,9 +97,11 @@ def _voxel_stats(mask, spacing):
 class ShapeFeatureExtractor:
     """Drop-in 3D shape feature extractor with accelerator dispatch.
 
-    ``diameter_variant='auto'`` (the default) picks the measured-best
-    (variant, block) for the case's vertex bucket from the autotune cache
-    (``repro.runtime.autotune``); pass a concrete variant to pin it.
+    ``diameter_variant='auto'`` and ``mc_block='auto'`` (the defaults) pick
+    the measured-best diameter (variant, block) for the case's vertex
+    bucket and the measured-best marching-cubes (brick, chunk) for the
+    case's padded-volume bucket from the autotune cache
+    (``repro.runtime.autotune``); pass concrete values to pin them.
     ``prune=True`` runs the exact candidate pruning stage
     (``repro.kernels.prune``) before the O(M^2) pair sweep -- identical
     diameters (bit-for-bit on the Pallas variants, up to f32 rounding on
@@ -107,11 +109,12 @@ class ShapeFeatureExtractor:
     """
 
     def __init__(self, backend: str | None = None, diameter_variant: str = "auto",
-                 mc_block=(8, 8, 8), diam_block: int | None = None,
-                 prune: bool = True):
+                 mc_block="auto", mc_chunk: int | None = None,
+                 diam_block: int | None = None, prune: bool = True):
         self.backend = dispatcher.resolve_backend(backend)
         self.diameter_variant = diameter_variant
-        self.mc_block = tuple(mc_block)
+        self.mc_block = mc_block if mc_block == "auto" else tuple(mc_block)
+        self.mc_chunk = mc_chunk
         self.diam_block = diam_block
         self.prune = prune
         self.last_prune_info = None  # PruneInfo of the most recent case
@@ -119,7 +122,8 @@ class ShapeFeatureExtractor:
     # -- staged API (used by the Table-2 benchmark harness) ----------------
     def mesh_features(self, mask_padded, spacing):
         v, a = ops.mc_volume_area(
-            mask_padded, 0.5, spacing, backend=self.backend, block=self.mc_block
+            mask_padded, 0.5, spacing, backend=self.backend,
+            block=self.mc_block, chunk=self.mc_chunk,
         )
         return v, a
 

@@ -152,6 +152,25 @@ def _mc_kernel(scal, table_ref, brick, vol_out, area_out, *, chunk):
     area_out[0, 0, 0] = sa
 
 
+def normalize_chunk(block, chunk: int) -> int:
+    """Clamp ``chunk`` to a valid in-kernel chunk length for ``block``.
+
+    The kernel slices each brick's ``bx*by*bz`` cells into equal chunks, so
+    a valid chunk divides the cell count; oversized chunks clamp to it.
+    Shared by the kernel entry point, the autotune sweep's candidate
+    enumeration and its cache-record validation (``runtime.autotune``).
+
+    Raises ``ValueError`` when no clamp can make ``chunk`` valid.
+    """
+    bx, by, cz = block
+    cells = bx * by * cz
+    if cells % chunk:
+        chunk = min(chunk, cells)
+        if cells % chunk:
+            raise ValueError(f"chunk {chunk} must divide cells/brick {cells}")
+    return chunk
+
+
 def _restack(vol, bx, by, cz):
     """Host-side overlapping brick view: (nbx, nby, nbz, BX+1, BY+1, CZ+1)."""
     nx, ny, nz = vol.shape
@@ -189,11 +208,7 @@ def mc_volume_area_pallas(
     """
     vol = jnp.asarray(vol, jnp.float32)
     bx, by, cz = block
-    cells = bx * by * cz
-    if cells % chunk:
-        chunk = min(chunk, cells)
-        if cells % chunk:
-            raise ValueError(f"chunk {chunk} must divide cells/brick {cells}")
+    chunk = normalize_chunk(block, chunk)
     bricks, (nbx, nby, nbz) = _restack(vol, bx, by, cz)
 
     # centre the coordinate origin to minimise f32 cancellation

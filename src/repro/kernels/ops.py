@@ -19,16 +19,26 @@ from repro.kernels import ref as _ref
 
 
 def mc_volume_area(vol, iso=0.5, spacing=(1.0, 1.0, 1.0), *, backend=None, **kw):
-    """(mesh_volume, surface_area) of the isosurface of ``vol``."""
+    """(mesh_volume, surface_area) of the isosurface of ``vol``.
+
+    ``block='auto'`` (the default) resolves the measured-best MC
+    (brick, chunk) for the padded-volume bucket from the autotune cache
+    (see ``repro.runtime.autotune``).  Resolution may sweep, so traced
+    callers must pass a concrete ``block`` AND ``chunk`` (resolved outside
+    the trace via ``dispatcher.mc_config``).
+    """
     b = dispatcher.resolve_backend(backend)
     if b == "ref":
         return _ref.mc_volume_area(vol, iso, spacing, chunk_z=kw.get("chunk_z", 32))
+    block, chunk = kw.get("block", "auto"), kw.get("chunk")
+    if block is None or block == "auto" or chunk is None:
+        block, chunk = dispatcher.mc_config(b, np.shape(vol), block, chunk)
     return _mc.mc_volume_area_pallas(
         vol,
         iso,
         spacing,
-        block=kw.get("block", (8, 8, 8)),
-        chunk=kw.get("chunk", 512),
+        block=tuple(block),
+        chunk=chunk,
         **dispatcher.kernel_kwargs(b),
     )
 
@@ -54,6 +64,27 @@ def max_diameters(verts, mask, *, backend=None, **kw):
     )
 
 
+def _rebucket_pruned(orig_verts, orig_mask, v2, m2, info):
+    """Pad a pruned candidate list back up to its M' vertex bucket."""
+    if not info.pruned:
+        return v2, m2, info
+    cap = vertex_bucket(info.m_kept)
+    if cap >= info.m_total:
+        # the survivor bucket (>= 512 floor) is no smaller than the input,
+        # so re-bucketing would not shrink the padded pair sweep -- keep
+        # the originals and report the stage as a no-op
+        return (
+            np.asarray(orig_verts, np.float32),
+            np.asarray(orig_mask).astype(bool),
+            dataclasses.replace(info, m_kept=info.m_valid, pruned=False),
+        )
+    pad = cap - len(v2)
+    if pad > 0:
+        v2 = np.pad(v2, ((0, pad), (0, 0)))
+        m2 = np.pad(m2, (0, pad))
+    return v2, m2, info
+
+
 def prune_candidates(verts, mask, k_dirs: int = 16):
     """Exact host-side candidate pruning + re-bucketing for the pair sweep.
 
@@ -67,23 +98,28 @@ def prune_candidates(verts, mask, k_dirs: int = 16):
     from repro.kernels import prune as _prune
 
     v2, m2, info = _prune.prune_vertices(verts, mask, k_dirs=k_dirs)
-    if not info.pruned:
-        return v2, m2, info
-    cap = vertex_bucket(info.m_kept)
-    if cap >= info.m_total:
-        # the survivor bucket (>= 512 floor) is no smaller than the input,
-        # so re-bucketing would not shrink the padded pair sweep -- keep
-        # the originals and report the stage as a no-op
-        return (
-            np.asarray(verts, np.float32),
-            np.asarray(mask).astype(bool),
-            dataclasses.replace(info, m_kept=info.m_valid, pruned=False),
+    return _rebucket_pruned(verts, mask, v2, m2, info)
+
+
+def prune_candidates_batch(verts, masks, k_dirs: int = 16):
+    """Batched :func:`prune_candidates` for a (B, M, 3) stack of cases.
+
+    The keep-mask bound runs as ONE vmapped kernel over the whole stack
+    (the two-pass pipeline's pass 1); compaction + re-bucketing are per
+    case because the pruned counts M' are ragged.  Returns a list of B
+    ``(verts', mask', info)`` triples.
+    """
+    from repro.kernels import prune as _prune
+
+    verts_np = np.asarray(verts, np.float32)
+    masks_np = np.asarray(masks)
+    return [
+        _rebucket_pruned(v, m, v2, m2, info)
+        for (v, m), (v2, m2, info) in zip(
+            zip(verts_np, masks_np),
+            _prune.prune_vertices_batch(verts_np, masks_np, k_dirs=k_dirs),
         )
-    pad = cap - len(v2)
-    if pad > 0:
-        v2 = np.pad(v2, ((0, pad), (0, 0)))
-        m2 = np.pad(m2, (0, pad))
-    return v2, m2, info
+    ]
 
 
 def vertex_fields(vol, iso=0.5, spacing=(1.0, 1.0, 1.0), origin=(0.0, 0.0, 0.0)):

@@ -164,20 +164,11 @@ class PruneInfo:
         return self.m_kept / self.m_valid if self.m_valid else 1.0
 
 
-def prune_vertices(verts, mask, k_dirs: int = 16):
-    """Host-side pruning: compact survivors into a dense candidate list.
-
-    Returns ``(verts', mask', info)`` as numpy arrays with
-    ``verts'.shape == (M', 3)`` and an all-true mask.  Degenerate inputs
-    (fewer than 2 survivors, or nothing pruned) fall back to the originals
-    so callers never lose the empty/single-vertex semantics of the kernels.
-    """
-    verts_np = np.asarray(verts, np.float32)
-    mask_np = np.asarray(mask).astype(bool)
+def _compact_survivors(verts_np, mask_np, keep):
+    """Host-side compaction shared by the single and batched prune paths."""
     m_valid = int(mask_np.sum())
     if m_valid < 2:
         return verts_np, mask_np, PruneInfo(len(verts_np), m_valid, m_valid, False)
-    keep, _ = candidate_keep_mask(verts_np, mask_np, k_dirs=k_dirs)
     keep = np.asarray(keep)
     m_kept = int(keep.sum())
     if m_kept < 2 or m_kept >= m_valid:
@@ -188,3 +179,51 @@ def prune_vertices(verts, mask, k_dirs: int = 16):
         np.ones((m_kept,), bool),
         PruneInfo(len(verts_np), m_valid, m_kept, True),
     )
+
+
+def prune_vertices(verts, mask, k_dirs: int = 16):
+    """Host-side pruning: compact survivors into a dense candidate list.
+
+    Returns ``(verts', mask', info)`` as numpy arrays with
+    ``verts'.shape == (M', 3)`` and an all-true mask.  Degenerate inputs
+    (fewer than 2 survivors, or nothing pruned) fall back to the originals
+    so callers never lose the empty/single-vertex semantics of the kernels.
+    """
+    verts_np = np.asarray(verts, np.float32)
+    mask_np = np.asarray(mask).astype(bool)
+    if int(mask_np.sum()) < 2:  # callers reject empty; skip the kernel
+        keep = np.zeros(len(verts_np), bool)
+    else:
+        keep, _ = candidate_keep_mask(verts_np, mask_np, k_dirs=k_dirs)
+    return _compact_survivors(verts_np, mask_np, keep)
+
+
+@functools.partial(jax.jit, static_argnames=("k_dirs",))
+def _keep_mask_batch(verts, masks, k_dirs: int):
+    keep, lower = jax.vmap(
+        lambda v, m: candidate_keep_mask(v, m, k_dirs=k_dirs)
+    )(verts, masks)
+    return keep, lower
+
+
+def prune_vertices_batch(verts, masks, k_dirs: int = 16):
+    """Batched pass-1 pruning bound for a stack of same-cap cases.
+
+    ``verts``: (B, M, 3), ``masks``: (B, M).  One vmapped keep-mask kernel
+    computes every case's bound in a single launch (the batched pipeline's
+    pass 1); compaction stays host-side per case because the surviving
+    counts M' are ragged.  Returns a list of B ``(verts', mask', info)``
+    triples with the same degenerate-input semantics as
+    :func:`prune_vertices`.  Tie-breaks in the vmapped extreme search can
+    differ from the single-case path, so the surviving *sets* may differ --
+    both always contain every true farthest-pair endpoint, which is the
+    property the downstream diameters depend on.
+    """
+    verts_np = np.asarray(verts, np.float32)
+    masks_np = np.asarray(masks).astype(bool)
+    keep, _ = _keep_mask_batch(verts_np, masks_np, k_dirs)
+    keep = np.asarray(keep)
+    return [
+        _compact_survivors(v, m, k)
+        for v, m, k in zip(verts_np, masks_np, keep)
+    ]

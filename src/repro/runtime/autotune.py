@@ -1,31 +1,41 @@
-"""Measured (variant, block) selection for the diameter kernel.
+"""Measured kernel-configuration selection (diameter variants + MC bricks).
 
-The Fig.1-style variant study shows no single (variant, block) wins at
-every vertex count: small buckets want one big block (grid overhead), large
-buckets want the triangular prefetch schedule or the MXU 'gram' path.  This
-module turns that study into infrastructure: per vertex *bucket* (the
-static padding cap from ``ops.vertex_bucket``) it sweeps the candidate
-configurations once on the resolved backend, caches the winner in a JSON
-file, and hands the cached choice to every later call -- the TPU analogue
-of a CUDA occupancy/launch-bound autotuner.
+The Fig.1-style variant study shows no single configuration wins at every
+problem size: small vertex buckets want one big block (grid overhead), large
+buckets want the triangular prefetch schedule or the MXU 'gram' path, and
+the marching-cubes kernel has the same trade-off along its ``(bx, by, bz)``
+brick shape and in-kernel ``chunk`` length (VMEM residency vs grid overhead).
+This module turns that study into infrastructure: per static *bucket* (the
+vertex padding cap from ``ops.vertex_bucket`` for the diameter kernel, the
+padded volume shape for MC) it sweeps the candidate configurations once on
+the resolved backend, caches the winner in a JSON file, and hands the cached
+choice to every later call -- the TPU analogue of a CUDA occupancy/launch-
+bound autotuner.
 
-Cache: one JSON object keyed ``"diameter/<backend>/M<bucket>"`` holding the
-winning variant/block plus the full measured table (microseconds), so the
-sweep is also a persisted perf trajectory.  The path comes from
-``REPRO_AUTOTUNE_CACHE`` (default ``~/.cache/repro_autotune.json``); writes
-are atomic (tmp + rename) so concurrent processes at worst re-measure.
+Cache schema (versioned): one JSON object ``{"schema": 2, "entries": {...}}``
+with entries keyed ``"diameter/<backend>/M<bucket>"`` and
+``"mc/<backend>/S<nx>x<ny>x<nz>"``; each record holds the winning
+configuration plus the full measured table (microseconds), so the sweep is
+also a persisted perf trajectory.  PR 1 wrote a *flat* ``{key: record}``
+object (schema v1); loads migrate it transparently and the next ``put``
+rewrites the file in v2 form.  Unknown future schemas and malformed files
+load as empty (worst case: re-measure) -- the cache never crashes a run.
+The path comes from ``REPRO_AUTOTUNE_CACHE`` (default
+``~/.cache/repro_autotune.json``); writes are atomic (tmp + rename) so
+concurrent processes at worst re-measure.
 
 Sweeping policy: measured sweeps run by default only on the compiled
 ``pallas`` backend.  ``interpret`` is a correctness backend -- Python timings
 there are meaningless for TPU choices -- so it uses the default config
 unless ``REPRO_AUTOTUNE=1`` forces a sweep (used by tests to exercise the
 round-trip) ; ``REPRO_AUTOTUNE=0`` disables sweeping everywhere.  The
-``ref`` backend has no (variant, block) axis at all.
+``ref`` backend has no configuration axis at all.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import os
 import tempfile
 import time
@@ -33,8 +43,13 @@ import time
 import jax
 import numpy as np
 
+SCHEMA_VERSION = 2
+
 DEFAULT_VARIANTS = ("seqacc", "tri_prefetch", "nomask", "gram")
 DEFAULT_BLOCKS = (128, 256, 512)
+
+DEFAULT_MC_BLOCKS = ((8, 8, 8), (16, 8, 8), (8, 8, 16), (16, 16, 8))
+DEFAULT_MC_CHUNKS = (256, 512, 1024)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,7 +58,14 @@ class DiameterConfig:
     block: int
 
 
+@dataclasses.dataclass(frozen=True)
+class MCConfig:
+    block: tuple[int, int, int]
+    chunk: int
+
+
 DEFAULT_CONFIG = DiameterConfig("seqacc", 256)
+DEFAULT_MC_CONFIG = MCConfig((8, 8, 8), 512)
 
 
 def cache_path() -> str:
@@ -54,30 +76,55 @@ def cache_path() -> str:
 
 
 class AutotuneCache:
-    """Tiny JSON key->record store with atomic writes."""
+    """Tiny versioned JSON key->record store with atomic writes.
+
+    On disk: ``{"schema": 2, "entries": {key: record}}``.  Schema v1 (the
+    PR 1 layout: a flat ``{key: record}`` object with no ``schema`` field)
+    is migrated on load; an unknown schema or a malformed file reads as
+    empty so stale caches degrade to a re-sweep, never a crash.
+    """
 
     def __init__(self, path: str | None = None):
         self.path = path or cache_path()
 
-    def _read(self) -> dict:
+    def _read_raw(self) -> dict:
         try:
             with open(self.path) as f:
-                return json.load(f)
+                data = json.load(f)
         except (OSError, ValueError):
             return {}
+        return data if isinstance(data, dict) else {}
+
+    def _entries(self) -> dict:
+        raw = self._read_raw()
+        if "schema" not in raw:
+            # v1 (PR 1): flat key -> record mapping
+            return {k: v for k, v in raw.items() if isinstance(v, dict)}
+        if raw.get("schema") != SCHEMA_VERSION:
+            return {}  # future schema: don't guess, re-measure
+        ent = raw.get("entries")
+        return ent if isinstance(ent, dict) else {}
 
     def get(self, key: str):
-        return self._read().get(key)
+        return self._entries().get(key)
 
     def put(self, key: str, record: dict) -> None:
-        data = self._read()
-        data[key] = record
+        raw = self._read_raw()
+        schema = raw.get("schema")
+        if isinstance(schema, int) and schema > SCHEMA_VERSION:
+            # a NEWER code version owns this file; rewriting it as v2 would
+            # destroy its entries.  Skip the write -- re-measuring every run
+            # is the documented worst case, losing data is not.
+            return
+        entries = self._entries()  # migrates v1 entries forward
+        entries[key] = record
+        payload = {"schema": SCHEMA_VERSION, "entries": entries}
         d = os.path.dirname(self.path) or "."
         os.makedirs(d, exist_ok=True)
         fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
         try:
             with os.fdopen(fd, "w") as f:
-                json.dump(data, f, indent=1, sort_keys=True)
+                json.dump(payload, f, indent=1, sort_keys=True)
             os.replace(tmp, self.path)
         except OSError:  # pragma: no cover - cache is best-effort
             try:
@@ -88,6 +135,21 @@ class AutotuneCache:
 
 def sweep_key(bucket: int, backend: str) -> str:
     return f"diameter/{backend}/M{int(bucket)}"
+
+
+def mc_key(shape, backend: str) -> str:
+    nx, ny, nz = (int(s) for s in shape)
+    return f"mc/{backend}/S{nx}x{ny}x{nz}"
+
+
+def mc_shape_bucket(shape, step: int = 32) -> tuple[int, int, int]:
+    """Pad a volume shape up to the autotune bucket grid (limits key space)."""
+    return tuple(max(step, int(math.ceil(int(s) / step)) * step) for s in shape)
+
+
+# ---------------------------------------------------------------------------
+# diameter kernel sweep
+# ---------------------------------------------------------------------------
 
 
 def measure_diameter_config(
@@ -204,6 +266,167 @@ def get_diameter_config(
             "variant": best.variant,
             "block": best.block,
             "us": table[f"{best.variant}/{best.block}"],
+            "table": table,
+            "swept_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        },
+    )
+    return best
+
+
+# ---------------------------------------------------------------------------
+# marching-cubes brick sweep
+# ---------------------------------------------------------------------------
+
+
+def _mc_probe_volume(shape) -> np.ndarray:
+    """Surface-bearing synthetic mask for MC timing: a centred ellipsoid.
+
+    A representative occupancy matters more than the exact surface: the
+    kernel's work is per-brick, and an ellipsoid at ~0.35 radius exercises
+    both surface bricks (full triangle tables) and empty/interior ones.
+    """
+    nx, ny, nz = shape
+    g = np.indices(shape, dtype=np.float32)
+    c = (np.asarray(shape, np.float32) - 1.0) / 2.0
+    r = np.maximum(np.asarray(shape, np.float32) * 0.35, 2.0)
+    d2 = sum(((g[i] - c[i]) / r[i]) ** 2 for i in range(3))
+    return (d2 < 1.0).astype(np.float32)
+
+
+def measure_mc_config(
+    shape,
+    backend: str,
+    block,
+    chunk: int,
+    *,
+    repeat: int = 2,
+    warmup: int = 1,
+) -> float:
+    """Best-of-``repeat`` wall-clock seconds for one MC (block, chunk)."""
+    from repro.core import dispatcher
+    from repro.kernels import marching_cubes as mck
+
+    vol = _mc_probe_volume(tuple(int(s) for s in shape))
+    kw = dispatcher.kernel_kwargs(backend)
+
+    def call():
+        return mck.mc_volume_area_pallas(
+            vol, 0.5, (1.0, 1.0, 1.0), block=tuple(block), chunk=chunk, **kw
+        )
+
+    for _ in range(warmup):
+        jax.block_until_ready(call())
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(call())
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def mc_candidates(blocks=DEFAULT_MC_BLOCKS, chunks=DEFAULT_MC_CHUNKS):
+    """Valid (block, chunk) pairs: chunk must tile the brick's cell count.
+
+    Candidates that only clamp to an already-listed chunk are dropped so
+    the sweep never measures the same effective configuration twice.
+    """
+    from repro.kernels import marching_cubes as mck
+
+    out = []
+    for block in blocks:
+        bx, by, bz = (int(b) for b in block)
+        usable = []
+        for c in chunks:
+            try:
+                eff = mck.normalize_chunk((bx, by, bz), c)
+            except ValueError:
+                continue
+            if eff == c:  # clamped duplicates measure nothing new
+                usable.append(c)
+        if not usable:
+            usable = [bx * by * bz]
+        out.extend(((bx, by, bz), c) for c in usable)
+    return out
+
+
+def sweep_mc(
+    shape,
+    backend: str,
+    *,
+    blocks=DEFAULT_MC_BLOCKS,
+    chunks=DEFAULT_MC_CHUNKS,
+    repeat: int = 2,
+):
+    """Measure every valid MC (block, chunk) candidate; (best, table).
+
+    ``table`` maps ``"BXxBYxBZ/chunk"`` to measured microseconds.
+    """
+    table: dict[str, float] = {}
+    best, best_t = None, float("inf")
+    for block, chunk in mc_candidates(blocks, chunks):
+        t = measure_mc_config(shape, backend, block, chunk, repeat=repeat)
+        table[f"{block[0]}x{block[1]}x{block[2]}/{chunk}"] = t * 1e6
+        if t < best_t:
+            best, best_t = MCConfig(block, chunk), t
+    return best, table
+
+
+def _valid_mc_record(hit) -> MCConfig | None:
+    from repro.kernels import marching_cubes as mck
+
+    try:
+        block = tuple(int(b) for b in hit["block"])
+        chunk = int(hit["chunk"])
+    except (KeyError, TypeError, ValueError):
+        return None
+    if len(block) != 3 or any(b <= 0 for b in block) or chunk <= 0:
+        return None
+    try:
+        if mck.normalize_chunk(block, chunk) != chunk:
+            return None  # stale entry: chunk no longer tiles the brick
+    except ValueError:
+        return None
+    return MCConfig(block, chunk)
+
+
+def get_mc_config(
+    shape,
+    backend: str,
+    *,
+    cache: AutotuneCache | None = None,
+    blocks=DEFAULT_MC_BLOCKS,
+    chunks=DEFAULT_MC_CHUNKS,
+    repeat: int = 2,
+) -> MCConfig:
+    """Cached-or-swept best MC (brick, chunk) for a padded-volume bucket.
+
+    Same contract as :func:`get_diameter_config`: cache hit -> no kernel
+    runs; miss sweeps when allowed and persists winner + table; disallowed
+    sweeps return the default uncached.  ``shape`` should already be an
+    autotune bucket (see :func:`mc_shape_bucket`) so the key space stays
+    bounded.
+    """
+    if backend == "ref":
+        return DEFAULT_MC_CONFIG
+    shape = tuple(int(s) for s in shape)
+    cache = cache or AutotuneCache()
+    key = mc_key(shape, backend)
+    hit = cache.get(key)
+    if hit is not None:
+        cfg = _valid_mc_record(hit)
+        if cfg is not None:
+            return cfg
+    if not _sweep_allowed(backend):
+        return DEFAULT_MC_CONFIG
+    best, table = sweep_mc(
+        shape, backend, blocks=blocks, chunks=chunks, repeat=repeat
+    )
+    cache.put(
+        key,
+        {
+            "block": list(best.block),
+            "chunk": best.chunk,
+            "us": table[f"{best.block[0]}x{best.block[1]}x{best.block[2]}/{best.chunk}"],
             "table": table,
             "swept_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
         },

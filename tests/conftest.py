@@ -11,6 +11,7 @@ if importlib.util.find_spec("hypothesis") is None:
         "test_kernels_diameter.py",
         "test_kernels_mc.py",
         "test_mc_tables.py",
+        "test_prune_properties.py",
     ]
 
 

@@ -1,0 +1,247 @@
+"""Autotune cache: versioned schema round-trip, v1 migration, MC sweeps.
+
+The cache outlives code versions (it sits in ~/.cache across PRs), so the
+failure modes under test are the real ones: PR 1 wrote a flat schema-less
+JSON object; files can be truncated or hand-edited; entries can reference
+configurations that no longer validate.  Every one of those must degrade
+to a re-sweep, never a crash, and diameter + MC entries must coexist in
+one file.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.runtime import autotune
+
+pytestmark = pytest.mark.tier1
+
+SHAPE = (16, 16, 16)
+# restricted candidate sets: keep interpret-mode measuring sweeps cheap
+MC_RESTRICT = dict(blocks=((8, 8, 8),), chunks=(256,))
+
+
+@pytest.fixture
+def cache_path(tmp_path, monkeypatch):
+    path = str(tmp_path / "autotune.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    return path
+
+
+def _v1_payload():
+    # PR 1-era flat layout: no "schema" field, keys at top level
+    return {
+        "diameter/interpret/M256": {
+            "variant": "gram", "block": 128, "us": 11.0,
+            "table": {"gram/128": 11.0}, "swept_at": "2026-01-01T00:00:00",
+        }
+    }
+
+
+# ---------------------------------------------------------------------------
+# schema round-trip + migration
+# ---------------------------------------------------------------------------
+
+
+def test_v2_schema_roundtrip_mixed_entries(cache_path):
+    cache = autotune.AutotuneCache()
+    cache.put("diameter/interpret/M512",
+              {"variant": "seqacc", "block": 256, "us": 1.0, "table": {}})
+    cache.put(autotune.mc_key(SHAPE, "interpret"),
+              {"block": [8, 8, 8], "chunk": 256, "us": 2.0, "table": {}})
+    raw = json.load(open(cache_path))
+    assert raw["schema"] == autotune.SCHEMA_VERSION
+    assert set(raw["entries"]) == {
+        "diameter/interpret/M512", "mc/interpret/S16x16x16"
+    }
+    assert cache.get("diameter/interpret/M512")["variant"] == "seqacc"
+    assert cache.get("mc/interpret/S16x16x16")["chunk"] == 256
+
+
+def test_v1_file_migrates_on_load(cache_path, monkeypatch):
+    with open(cache_path, "w") as f:
+        json.dump(_v1_payload(), f)
+    # the migrated entry must satisfy the config lookup WITHOUT a sweep
+    monkeypatch.setattr(
+        autotune, "sweep_diameter",
+        lambda *a, **k: pytest.fail("migrated v1 entry ignored: re-swept"),
+    )
+    cfg = autotune.get_diameter_config(256, "interpret")
+    assert cfg == autotune.DiameterConfig("gram", 128)
+
+
+def test_v1_file_upgraded_and_preserved_on_put(cache_path):
+    with open(cache_path, "w") as f:
+        json.dump(_v1_payload(), f)
+    cache = autotune.AutotuneCache()
+    cache.put(autotune.mc_key(SHAPE, "interpret"),
+              {"block": [8, 8, 8], "chunk": 512, "us": 3.0, "table": {}})
+    raw = json.load(open(cache_path))
+    assert raw["schema"] == autotune.SCHEMA_VERSION
+    # the PR 1 diameter entry rode along into the v2 envelope
+    assert raw["entries"]["diameter/interpret/M256"]["variant"] == "gram"
+    assert raw["entries"]["mc/interpret/S16x16x16"]["chunk"] == 512
+
+
+def test_unknown_future_schema_resweeps_without_destroying_file(
+        cache_path, monkeypatch):
+    """A schema from a NEWER code version reads as empty (re-sweep) but is
+    never rewritten: losing the newer version's entries would exceed the
+    documented 'worst case: re-measure' contract."""
+    future = {"schema": 99, "entries": _v1_payload()}
+    with open(cache_path, "w") as f:
+        json.dump(future, f)
+    sweeps = []
+    orig = autotune.sweep_diameter
+
+    def counting(*a, **kw):
+        sweeps.append(a)
+        kw["variants"], kw["blocks"] = ("seqacc",), (128,)
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(autotune, "sweep_diameter", counting)
+    cfg = autotune.get_diameter_config(256, "interpret")
+    assert len(sweeps) == 1 and cfg.variant == "seqacc"
+    assert json.load(open(cache_path)) == future  # untouched
+    # ... and with no cached winner, the next lookup re-sweeps again
+    autotune.get_diameter_config(256, "interpret")
+    assert len(sweeps) == 2
+
+
+def test_malformed_file_reads_empty_and_recovers(cache_path):
+    with open(cache_path, "w") as f:
+        f.write("{ not json !!")
+    cache = autotune.AutotuneCache()
+    assert cache.get("diameter/interpret/M256") is None
+    cache.put("k", {"v": 1})  # recovery: put overwrites the broken file
+    assert cache.get("k") == {"v": 1}
+
+
+# ---------------------------------------------------------------------------
+# MC brick sweep: round-trip, stale-entry re-sweep, coexistence
+# ---------------------------------------------------------------------------
+
+
+def test_mc_sweep_roundtrip_caches_once(cache_path, monkeypatch):
+    sweeps = []
+    orig = autotune.sweep_mc
+
+    def counting(*a, **kw):
+        sweeps.append(a)
+        kw.update(MC_RESTRICT)
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(autotune, "sweep_mc", counting)
+    cfg1 = autotune.get_mc_config(SHAPE, "interpret")
+    assert len(sweeps) == 1
+    cfg2 = autotune.get_mc_config(SHAPE, "interpret")
+    assert len(sweeps) == 1  # pure cache read
+    assert cfg1 == cfg2 == autotune.MCConfig((8, 8, 8), 256)
+    rec = autotune.AutotuneCache().get(autotune.mc_key(SHAPE, "interpret"))
+    assert rec["block"] == [8, 8, 8] and rec["chunk"] == 256
+    assert rec["table"]  # the measured table is the persisted trajectory
+
+
+@pytest.mark.parametrize("bad", [
+    {"block": "bogus", "chunk": 256},
+    {"block": [8, 8], "chunk": 256},          # wrong rank
+    {"block": [8, 8, 8], "chunk": 7},         # chunk no longer tiles brick
+    {"block": [8, -8, 8], "chunk": 256},
+    {"chunk": 256},
+])
+def test_malformed_or_stale_mc_entry_triggers_resweep(cache_path, bad):
+    cache = autotune.AutotuneCache()
+    cache.put(autotune.mc_key(SHAPE, "interpret"), bad)
+    cfg = autotune.get_mc_config(SHAPE, "interpret", **MC_RESTRICT)
+    assert cfg == autotune.MCConfig((8, 8, 8), 256)  # swept, not crashed
+    rec = cache.get(autotune.mc_key(SHAPE, "interpret"))
+    assert rec["block"] == [8, 8, 8] and rec["chunk"] == 256
+
+
+def test_mc_and_diameter_entries_coexist(cache_path, monkeypatch):
+    monkeypatch.setattr(
+        autotune, "sweep_diameter",
+        lambda bucket, backend, **kw: (
+            autotune.DiameterConfig("seqacc", 64), {"seqacc/64": 1.0}
+        ),
+    )
+    autotune.get_diameter_config(128, "interpret")
+    autotune.get_mc_config(SHAPE, "interpret", **MC_RESTRICT)
+    raw = json.load(open(cache_path))
+    assert set(raw["entries"]) == {
+        "diameter/interpret/M128", "mc/interpret/S16x16x16"
+    }
+    # each lookup reads back only its own entry
+    assert autotune.get_diameter_config(128, "interpret").block == 64
+    assert autotune.get_mc_config(SHAPE, "interpret").chunk == 256
+
+
+def test_mc_disabled_returns_default_uncached(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE", "0")
+    path = str(tmp_path / "at.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    assert autotune.get_mc_config(SHAPE, "interpret") == autotune.DEFAULT_MC_CONFIG
+    assert not os.path.exists(path)
+
+
+def test_mc_ref_backend_has_no_axis(cache_path):
+    assert autotune.get_mc_config(SHAPE, "ref") == autotune.DEFAULT_MC_CONFIG
+
+
+# ---------------------------------------------------------------------------
+# dispatcher / extractor wiring for mc_block='auto'
+# ---------------------------------------------------------------------------
+
+
+def test_dispatcher_mc_auto_reads_cached_entry(cache_path):
+    from repro.core import dispatcher
+
+    bucket = autotune.mc_shape_bucket((30, 29, 31))
+    assert bucket == (32, 32, 32)
+    autotune.AutotuneCache().put(
+        autotune.mc_key(bucket, "interpret"),
+        {"block": [16, 8, 8], "chunk": 512, "us": 1.0, "table": {}},
+    )
+    blk, chunk = dispatcher.mc_config("interpret", (30, 29, 31))
+    assert (blk, chunk) == ((16, 8, 8), 512)
+    # explicit values always win over the tuned entry
+    blk, chunk = dispatcher.mc_config("interpret", (30, 29, 31),
+                                      block=(8, 8, 8), chunk=256)
+    assert (blk, chunk) == ((8, 8, 8), 256)
+    # ref backend: the choice is moot
+    assert dispatcher.mc_config("ref", (30, 29, 31))[0] == (8, 8, 8)
+
+
+def test_extractor_mc_autotune_roundtrip(cache_path, monkeypatch):
+    """Second execute() with the same shape bucket reads the cached MC
+    (brick, chunk) without re-sweeping -- the MC analogue of the diameter
+    autotune acceptance test."""
+    from conftest import sphere_mask
+    from repro.core.shape_features import ShapeFeatureExtractor
+
+    mc_sweeps, diam_sweeps = [], []
+    orig_mc, orig_d = autotune.sweep_mc, autotune.sweep_diameter
+
+    def counting_mc(*a, **kw):
+        mc_sweeps.append(a)
+        kw.update(MC_RESTRICT)
+        return orig_mc(*a, **kw)
+
+    def counting_d(*a, **kw):
+        diam_sweeps.append(a)
+        kw["variants"], kw["blocks"] = ("seqacc",), (256,)
+        return orig_d(*a, **kw)
+
+    monkeypatch.setattr(autotune, "sweep_mc", counting_mc)
+    monkeypatch.setattr(autotune, "sweep_diameter", counting_d)
+    img = np.zeros((12, 12, 12), np.float32)
+    msk = sphere_mask(12, 4.0)
+    f1 = ShapeFeatureExtractor(backend="interpret").execute(img, msk)
+    n_mc, n_d = len(mc_sweeps), len(diam_sweeps)
+    assert n_mc == 1 and n_d >= 1
+    f2 = ShapeFeatureExtractor(backend="interpret").execute(img, msk)
+    assert len(mc_sweeps) == n_mc and len(diam_sweeps) == n_d
+    for k in f1:
+        np.testing.assert_allclose(f1[k], f2[k], rtol=0, atol=0)

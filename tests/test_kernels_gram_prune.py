@@ -216,7 +216,8 @@ def test_autotune_cache_roundtrip(tmp_path, monkeypatch):
     assert len(sweeps) == 1  # second call: pure cache read
     assert cfg1 == cfg2
     data = json.load(open(path))
-    rec = data[autotune.sweep_key(256, "interpret")]
+    assert data["schema"] == autotune.SCHEMA_VERSION  # v2 envelope (PR 2)
+    rec = data["entries"][autotune.sweep_key(256, "interpret")]
     assert rec["variant"] == cfg1.variant and rec["block"] == cfg1.block
     assert len(rec["table"]) == 2  # the restricted candidate sweep
 
@@ -230,13 +231,21 @@ def test_extractor_autotune_roundtrip(tmp_path, monkeypatch):
     _force_autotune(monkeypatch, tmp_path)
     sweeps = []
     orig = autotune.sweep_diameter
+    orig_mc = autotune.sweep_mc
 
     def counting(*a, **kw):
         sweeps.append(a)
         kw["variants"], kw["blocks"] = ("seqacc", "gram"), (256,)
         return orig(*a, **kw)
 
+    def restricted_mc(*a, **kw):
+        # mc_block='auto' sweeps too now; restrict it so this test stays
+        # focused (and fast) on the diameter round-trip
+        kw["blocks"], kw["chunks"] = ((8, 8, 8),), (512,)
+        return orig_mc(*a, **kw)
+
     monkeypatch.setattr(autotune, "sweep_diameter", counting)
+    monkeypatch.setattr(autotune, "sweep_mc", restricted_mc)
     img = np.zeros((12, 12, 12), np.float32)
     msk = sphere_mask(12, 4.0)
     f1 = ShapeFeatureExtractor(backend="interpret").execute(img, msk)

@@ -1,0 +1,126 @@
+"""Hypothesis property tests for the pruning / re-bucketing invariants.
+
+Gated on hypothesis being importable (see tests/conftest.py); seeded
+plain-pytest mirrors live in tests/test_pipeline_pruned_batch.py so the
+invariants are exercised even in the minimal container.
+
+Invariants (the soundness argument of kernels/prune and the two-pass
+pipeline's pass 1):
+
+  1. the pruned set always contains EVERY endpoint of every pair attaining
+     a combo maximum -- the property that makes pruned diameters exact;
+  2. M' <= M_valid <= M_total, and survivors are a subset of the inputs;
+  3. pruning (and the vmapped batched bound) is diameter-invariant under
+     input permutation -- bit-identical on the Pallas kernels;
+  4. the pipeline's re-bucketing partition never drops or duplicates a
+     case index.
+"""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.pipeline import group_indices
+from repro.kernels import diameter as dk
+from repro.kernels import ops, prune
+
+_SETTINGS = dict(
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+
+
+def _cloud(seed: int, m: int, scale: float, hole: float):
+    rng = np.random.default_rng(seed)
+    verts = (rng.normal(size=(m, 3)) * scale).astype(np.float32)
+    mask = rng.random(m) > hole
+    if mask.sum() < 2:
+        mask[:2] = True
+    return verts, mask
+
+
+cloud_args = dict(
+    seed=st.integers(0, 2**31 - 1),
+    m=st.integers(8, 192),
+    scale=st.floats(0.25, 80.0),
+    hole=st.floats(0.0, 0.6),
+)
+
+
+@given(**cloud_args)
+@settings(**_SETTINGS)
+def test_pruned_set_contains_both_farthest_endpoints(seed, m, scale, hole):
+    verts, mask = _cloud(seed, m, scale, hole)
+    keep, lower_sq = prune.candidate_keep_mask(verts, mask)
+    keep = np.asarray(keep)
+    valid = np.nonzero(mask)[0]
+    v = verts[valid]
+    d = v[:, None, :] - v[None, :, :]
+    q = (d * d).astype(np.float32)
+    planes = (q[..., 0] + q[..., 1] + q[..., 2], q[..., 0] + q[..., 1],
+              q[..., 0] + q[..., 2], q[..., 1] + q[..., 2])
+    for c, s in enumerate(planes):
+        mx = s.max()
+        # the lower bound is a real achieved distance, so it can never
+        # exceed the true combo maximum
+        assert float(np.asarray(lower_sq)[c]) <= mx * (1.0 + 1e-5) + 1e-6
+        ii, jj = np.nonzero(s == mx)
+        ends = np.unique(np.concatenate([valid[ii], valid[jj]]))
+        assert keep[ends].all(), f"combo {c}: true endpoint pruned"
+
+
+@given(**cloud_args)
+@settings(**_SETTINGS)
+def test_m_prime_le_m_and_survivors_are_inputs(seed, m, scale, hole):
+    verts, mask = _cloud(seed, m, scale, hole)
+    v2, m2, info = prune.prune_vertices(verts, mask)
+    assert info.m_kept <= info.m_valid <= info.m_total == m
+    if info.pruned:
+        # every survivor is one of the original valid vertices
+        rows = {tuple(r) for r in verts[mask]}
+        assert all(tuple(r) in rows for r in v2[m2])
+
+
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(8, 96),
+       scale=st.floats(0.5, 50.0))
+@settings(**_SETTINGS)
+def test_prune_diameters_permutation_invariant(seed, m, scale):
+    verts, mask = _cloud(seed, m, scale, 0.2)
+    rng = np.random.default_rng(seed ^ 0x5EED)
+    p = rng.permutation(m)
+    a_v, a_m, _ = prune.prune_vertices(verts, mask)
+    b_v, b_m, _ = prune.prune_vertices(verts[p], mask[p])
+    a = np.asarray(dk.max_diameters_sq_pallas(a_v, a_m, block=64, interpret=True))
+    b = np.asarray(dk.max_diameters_sq_pallas(b_v, b_m, block=64, interpret=True))
+    np.testing.assert_array_equal(a, b)
+
+
+@given(seed=st.integers(0, 2**31 - 1), b=st.integers(2, 4),
+       m=st.integers(8, 64))
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_batched_bound_matches_single_diameters(seed, b, m):
+    """One vmapped pass-1 launch == B single launches, case for case."""
+    clouds = [_cloud(seed + j, m, 10.0, 0.2) for j in range(b)]
+    batch = ops.prune_candidates_batch(
+        np.stack([v for v, _ in clouds]), np.stack([mk for _, mk in clouds])
+    )
+    assert len(batch) == b
+    for (v, mk), (v2, m2, info) in zip(clouds, batch):
+        assert info.m_kept <= info.m_valid
+        sv, sm, _ = ops.prune_candidates(v, mk)
+        got = np.asarray(dk.max_diameters_sq_pallas(v2, m2, block=64, interpret=True))
+        want = np.asarray(dk.max_diameters_sq_pallas(sv, sm, block=64, interpret=True))
+        np.testing.assert_array_equal(got, want)
+
+
+@given(st.lists(st.one_of(st.none(), st.integers(0, 5)), max_size=48))
+@settings(max_examples=50, deadline=None)
+def test_rebucketing_partition_never_drops_or_duplicates(keys):
+    groups = group_indices(keys)
+    flat = sorted(i for idxs in groups.values() for i in idxs)
+    assert flat == [i for i, k in enumerate(keys) if k is not None]
+    for k, idxs in groups.items():
+        assert all(keys[i] == k for i in idxs)
+        assert idxs == sorted(idxs)  # order-preserving
