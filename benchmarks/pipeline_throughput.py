@@ -4,15 +4,18 @@ The paper's motivating workload is ~40 000 CT scans on a cluster (xLUNGS);
 its discussion notes that for complete workflows data loading dominates
 small cases and DMA/compute overlap is the open opportunity.  This
 benchmark runs the BatchedExtractor over a batch of synthetic cases in
-three modes -- the single-case loop, the legacy one-pass batched pipeline
-(no pruning: the unpruned baseline), and the two-pass pruned pipeline
-(pass 1: vmapped exact pruning bound; pass 2: re-bucketed by M') -- and
-reports cases/second for each, the throughput story GPU/TPU acceleration
-exists to serve.
+four modes -- the single-case loop, the legacy one-pass batched pipeline
+(no pruning: the unpruned baseline), the two-pass pruned pipeline with
+PR 2's host-side survivor compaction (``device_compact=False``), and the
+default device-resident pipeline (pass 1 compacts survivors on device via
+``kernels/compact`` and feeds pass 2 directly) -- and reports cases/second
+for each, the throughput story GPU/TPU acceleration exists to serve.
 
 ``run(records=...)`` appends one dict per mode; ``benchmarks.run
 --json-pipeline`` serialises them as the ``BENCH_pipeline.json``
-perf-trajectory record (pruned vs unpruned cases/sec across PRs).
+perf-trajectory record (cases/sec per mode across PRs; the
+``two_pass_device_compact`` row is PR 3's headline vs PR 2's
+``batched_two_pass_pruned``).
 """
 from __future__ import annotations
 
@@ -31,7 +34,33 @@ def _cases(n: int, dims=(48, 48, 48)):
     return [make_case(dims, seed=100 + i) for i in range(n)]
 
 
-def run(n_cases: int = 12, records=None):
+def _best_interleaved(exts, cases, repeat):
+    """Warmup + interleaved best-of-``repeat`` runs per extractor.
+
+    The first run of each mode pays its sub-batch compilations (and the
+    runtime's allocator/dispatch caches settle over the next); a
+    throughput record that mixed those one-time costs into cases/sec
+    would charge the 40k-case sweep's setup to every 12-case window, so
+    warmup runs are excluded and each mode reports its best measured run
+    (same best-of policy as the autotune sweeps).  Measured runs are
+    INTERLEAVED round-robin across the modes so slow machine-load drift
+    lands on all of them equally instead of biasing whichever mode ran
+    last.
+    """
+    best = [None] * len(exts)
+    for ext in exts:
+        ext.run(cases)  # warmup: compile + settle, excluded
+    order = list(range(len(exts)))
+    for r in range(max(1, repeat)):
+        for k in order if r % 2 == 0 else reversed(order):  # ABBA: a load
+            # burst spanning a round boundary hits both orderings equally
+            res, stats = exts[k].run(cases)
+            if best[k] is None or stats["seconds"] < best[k][1]["seconds"]:
+                best[k] = (res, stats)
+    return best
+
+
+def run(n_cases: int = 12, records=None, repeat: int = 8):
     cases = _cases(n_cases)
     rows = []
 
@@ -42,12 +71,21 @@ def run(n_cases: int = 12, records=None):
     t_loop = time.perf_counter() - t0
 
     unpruned = BatchedExtractor(backend="ref", prune=False)
-    res_u, stats_u = unpruned.run(cases)
-    pruned = BatchedExtractor(backend="ref", prune=True)
-    res_p, stats_p = pruned.run(cases)
-    assert all(r is not None for r in res_u + res_p)
+    pruned = BatchedExtractor(backend="ref", prune=True, device_compact=False)
+    device = BatchedExtractor(backend="ref", prune=True, device_compact=True)
+    # the unpruned baseline is ~15x slower per run: two measured runs
+    # bound its noise well enough without dominating the bench's runtime
+    ((res_u, stats_u),) = _best_interleaved((unpruned,), cases, 2)
+    # host- vs device-compaction is a ~5% contest: interleave their runs
+    # so machine-load drift cannot bias the recorded winner
+    (res_p, stats_p), (res_d, stats_d) = _best_interleaved(
+        (pruned, device), cases, repeat
+    )
+    assert all(r is not None for r in res_u + res_p + res_d)
     for a, b in zip(res_u, res_p):  # pruning must not move the features
         np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+    for a, b in zip(res_p, res_d):  # device compaction must not move a BIT
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
     def emit(name, seconds, stats=None, **extra):
         derived = dict(
@@ -84,6 +122,14 @@ def run(n_cases: int = 12, records=None):
         keep_frac=f"{stats_p['mean_keep_fraction']:.3f}",
         speedup_vs_loop=f"{t_loop / stats_p['seconds']:.2f}",
         speedup_vs_unpruned=f"{stats_u['seconds'] / stats_p['seconds']:.2f}",
+    )
+    emit(
+        "two_pass_device_compact", stats_d["seconds"], stats_d,
+        buckets=stats_d["buckets"],
+        vertex_buckets=stats_d["vertex_buckets"],
+        keep_frac=f"{stats_d['mean_keep_fraction']:.3f}",
+        speedup_vs_loop=f"{t_loop / stats_d['seconds']:.2f}",
+        speedup_vs_host_compact=f"{stats_p['seconds'] / stats_d['seconds']:.2f}",
     )
     return rows
 

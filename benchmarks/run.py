@@ -12,9 +12,10 @@ Prints ``name,us_per_call,derived`` CSV.  Select suites with --only.
 ``--json PATH`` additionally writes a ``BENCH_diameter.json`` trajectory
 record (per-variant us_per_call, M, M', structural FLOP/byte estimates)
 from the fig1 suite, and ``--json-pipeline PATH`` a ``BENCH_pipeline.json``
-record (cases/sec for the single loop, the unpruned batched baseline, and
-the two-pass pruned pipeline) from the pipeline suite, so successive PRs
-can track both perf curves.
+record (cases/sec for the single loop, the unpruned batched baseline, the
+host-compaction two-pass pipeline, and the default device-compaction
+two-pass pipeline) from the pipeline suite, so successive PRs can track
+both perf curves.
 """
 from __future__ import annotations
 

@@ -12,10 +12,13 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # 1) tier-1 gate (ROADMAP "Tier-1 verify"), fail-fast
 python -m pytest -x -q ${SMOKE_TIER1_ONLY:+-m tier1}
 
-# 2) two-pass pruned-batch parity + autotune-cache gates: named explicitly
-#    (under the tier1 marker) so the batched==single contract and the cache
+# 2) two-pass parity + autotune-cache gates: named explicitly (under the
+#    tier1 marker) so the batched==single contract, the device==host
+#    compaction bit-identity, the gram precision guardrail, and the cache
 #    schema can never silently fall out of the gate
 python -m pytest -q -m tier1 tests/test_pipeline_pruned_batch.py \
+    tests/test_pipeline_device_compact.py \
+    tests/test_gram_precision.py \
     tests/test_autotune_cache.py
 
 # 3) kernel-wiring smoke: Fig.1 variant sweep (interpret mode) + the

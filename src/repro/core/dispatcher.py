@@ -70,6 +70,24 @@ def diameter_config(backend: str, bucket: int, variant: str = "auto",
     return cfg.variant, (block or cfg.block)
 
 
+def compact_config(backend: str, bucket: int, block="auto") -> int:
+    """Resolve the segmented-compaction scatter block for an M bucket.
+
+    ``block='auto'`` consults the measured autotune cache for the input
+    vertex bucket (``repro.runtime.autotune``); explicit values pass
+    through.  For the 'ref' backend the choice is moot and the default is
+    returned.  Like the other config resolvers this may run a measuring
+    sweep, so call it OUTSIDE any traced function.
+    """
+    from repro.runtime import autotune  # local import: avoid cycle
+
+    if block is not None and block != "auto":
+        return int(block)
+    if backend == "ref":
+        return autotune.DEFAULT_COMPACT_CONFIG.block
+    return autotune.get_compact_config(int(bucket), backend).block
+
+
 def mc_config(backend: str, shape, block="auto", chunk: int | None = None):
     """Resolve the (brick, chunk) the marching-cubes kernel should run with.
 

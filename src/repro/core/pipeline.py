@@ -6,12 +6,24 @@ module is step two: **throughput across cases**.
 
 Design (the two-pass pruned pipeline, ``prune=True``, the default):
 
-  * **pass 1 (host + one vmapped bound kernel per cap group):** every case
-    is cropped, padded to its shape bucket, and its deduplicated vertex
-    field compacted to the static vertex cap; cases sharing a cap are then
-    stacked and the *exact* pruning bound (``kernels/prune``) runs as a
-    single vmapped kernel over the stack, shrinking each candidate set
-    M -> M' (typically 10-30x) with guaranteed-identical maxima;
+  * **pass 1 (one vmapped bound kernel + one compaction kernel per cap
+    group):** every case is cropped, padded to its shape bucket, and its
+    deduplicated vertex field compacted to the static vertex cap; cases
+    sharing a cap are then stacked and the *exact* pruning bound
+    (``kernels/prune``) runs as a single vmapped kernel over the stack,
+    shrinking each candidate set M -> M' (typically 10-30x) with
+    guaranteed-identical maxima.  With ``device_compact=True`` (the
+    default) the survivors are then compacted into their M' buckets ON
+    DEVICE by the batched segmented-compaction kernel
+    (``kernels/compact``): the only host traffic pass 1 produces is one
+    small (B,) count fetch per cap group (to size the ragged M' buckets),
+    and the bucketed ``(verts, vmask)`` stacks stay device-resident all
+    the way into pass 2b -- no per-case ``np.asarray``/``np.nonzero``
+    round trip between the passes.  ``device_compact=False`` keeps the
+    PR 2 host-side compaction (bit-identical features; the parity
+    baseline).  With a mesh, the bound + compaction launches shard over
+    the ``data`` axis (``parallel.sharding.data_parallel_map``), so pass 1
+    scales over devices exactly like pass 2;
   * **pass 2 (re-bucketed batched kernels):** cases are re-grouped twice --
     by padded volume shape for the fused marching-cubes kernel and by the
     *pruned* vertex bucket M' for the O(M'^2) diameter kernel -- so each
@@ -59,6 +71,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import dispatcher
 from repro.core.shape_features import crop_to_roi
 from repro.kernels import ops
+from repro.kernels import prune as prune_kernels
+from repro.parallel import sharding as psharding
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,9 +116,10 @@ class _Prepped:
     mask: np.ndarray | None = None  # bucket-padded mask
     spacing: np.ndarray | None = None
     shape: tuple | None = None  # padded shape bucket (MC group key)
-    verts: np.ndarray | None = None  # (pruned) candidate vertices
-    vmask: np.ndarray | None = None
+    verts: object | None = None  # (pruned) candidates; jax.Array when the
+    vmask: object | None = None  # device-compaction path keeps them resident
     n_vertices: int = 0  # pre-prune dedup vertex count (a feature)
+    vertex_cap: int = 0  # static M' bucket the diameter kernel compiles for
     prune_info: object | None = None
 
 
@@ -141,10 +156,15 @@ class BatchedExtractor:
 
     ``prune=True`` (default) runs the two-pass pruned pipeline described in
     the module docstring; ``prune=False`` the legacy one-pass path.
-    ``variant='auto'`` / ``mc_block='auto'`` resolve the measured-best
-    diameter (variant, block) and MC (brick, chunk) once per bucket from
-    the autotune cache -- each sub-batch then compiles against the tuned
-    configuration.
+    ``device_compact=True`` (default) keeps pass 1's survivor compaction on
+    device (``kernels/compact``); ``device_compact=False`` selects the PR 2
+    host-side compaction -- bit-identical features, kept as the parity
+    baseline.  ``variant='auto'`` / ``mc_block='auto'`` /
+    ``compact_block='auto'`` resolve the measured-best diameter
+    (variant, block), MC (brick, chunk), and compaction scatter block once
+    per bucket from the autotune cache -- each sub-batch then compiles
+    against the tuned configuration.  ``mesh`` defaults to the ambient
+    ``parallel.sharding.use_mesh`` context.
     """
 
     N_FEATURES = 7  # [vol, area, d3, dxy, dxz, dyz, n_vertices]
@@ -152,15 +172,25 @@ class BatchedExtractor:
     def __init__(self, backend=None, variant="auto", mesh: Mesh | None = None,
                  data_axis: str = "data", prune: bool = True,
                  mc_block="auto", mc_chunk: int | None = None,
-                 k_dirs: int = 16):
+                 k_dirs: int = 16, device_compact: bool = True,
+                 compact_block="auto"):
         self.backend = dispatcher.resolve_backend(backend)
         self.variant = variant
+        if mesh is None:
+            # adopt the ambient use_mesh mesh only when it can actually
+            # shard the batch: train/serve meshes without a data axis must
+            # not turn a working CPU pipeline into a KeyError
+            ambient = psharding.active_mesh()
+            if ambient is not None and data_axis in ambient.shape:
+                mesh = ambient
         self.mesh = mesh
         self.data_axis = data_axis
         self.prune = prune
         self.mc_block = mc_block
         self.mc_chunk = mc_chunk
         self.k_dirs = k_dirs
+        self.device_compact = device_compact
+        self.compact_block = compact_block
         self._compiled = {}
 
     # -- compiled-function cache -------------------------------------------
@@ -184,6 +214,63 @@ class BatchedExtractor:
         if self.backend == "ref":
             return self.variant, None
         return dispatcher.diameter_config(self.backend, cap, self.variant)
+
+    def _bound_fn(self, cap: int):
+        """Pass 1b: sharded vmapped pruning bound + survivor counts.
+
+        Maps stacked ``(B, cap, 3)`` verts + ``(B, cap)`` masks to
+        ``(keep, m_valid, m_kept)``; with a mesh the batch shards over the
+        data axis (``data_parallel_map`` is a plain jit without one).
+        """
+        key = ("prune_bound", cap)
+        if key in self._compiled:
+            return self._compiled[key]
+        k_dirs = self.k_dirs
+
+        def batch(verts, masks):
+            keep, _ = prune_kernels.keep_mask_batch(verts, masks, k_dirs)
+            m_valid = jnp.sum(masks.astype(jnp.int32), axis=1)
+            m_kept = jnp.sum(keep.astype(jnp.int32), axis=1)
+            # counts ride out pre-stacked (B, 2) so the host fetch is one
+            # transfer with no eager stitching (batch dim first: shardable)
+            return keep, jnp.stack([m_valid, m_kept], axis=1)
+
+        fn = psharding.data_parallel_map(batch, self.mesh, self.data_axis)
+        self._compiled[key] = fn
+        return fn
+
+    def _compact_fn(self, cap_in: int, cap_out: int):
+        """Pass 1c: sharded batched segmented compaction into the M' bucket."""
+        key = ("compact", cap_in, cap_out)
+        if key in self._compiled:
+            return self._compiled[key]
+        backend = self.backend
+        # resolve the tuned scatter block OUTSIDE the traced function
+        block = (
+            None if backend == "ref"
+            else dispatcher.compact_config(backend, cap_in, self.compact_block)
+        )
+
+        def batch(verts, keep):
+            v, m, _ = ops.compact_survivors_batch(
+                verts, keep, cap_out, backend=backend, block=block
+            )
+            return v, m
+
+        fn = psharding.data_parallel_map(batch, self.mesh, self.data_axis)
+        self._compiled[key] = fn
+        return fn
+
+    def _pad_batch(self, arrays, n: int):
+        """Pad stacked leading dims to a data-axis multiple (first-row copies)."""
+        n_data = 1 if self.mesh is None else self.mesh.shape[self.data_axis]
+        np_ = int(math.ceil(max(n, 1) / n_data)) * n_data
+        if np_ == n:
+            return arrays
+        return tuple(
+            jnp.concatenate([a, jnp.repeat(a[:1], np_ - n, axis=0)])
+            for a in arrays
+        )
 
     def _batch_fn(self, bucket: Bucket):
         """Legacy one-pass fused per-case function (``prune=False``)."""
@@ -252,16 +339,16 @@ class BatchedExtractor:
 
     # -- batching driver ----------------------------------------------------
 
-    def _run_grouped(self, groups, fn_for_key, arrays_for_case,
-                     batch_size=None):
-        """Double-buffered grouped batch driver.
+    def _drive(self, entries, fn_for_key, make_chunk, batch_size=None):
+        """Shared double-buffered batch driver for both pass-2 feeds.
 
-        ``groups`` maps a compile key to case indices; ``arrays_for_case``
-        returns the per-case input arrays to stack.  Batches are padded to
-        a multiple of the mesh's data-axis size with copies of the first
-        chunk element so shard_map shapes stay uniform; ``device_put`` of
-        batch k+1 overlaps the compute of batch k.  Returns
-        ``{case index: np row}`` -- each input index exactly once.
+        ``entries`` yields ``(compile key, case indices, payload)``;
+        ``make_chunk(payload, start, chunk, bs)`` materialises the stacked
+        input arrays for one chunk, padded up to ``bs`` rows.  Batch sizes
+        are rounded to a multiple of the mesh's data-axis size so
+        shard_map shapes stay uniform; the submit of batch k+1 overlaps
+        the compute of batch k.  Returns ``{case index: np row}`` -- each
+        input index exactly once.
         """
         n_data = 1
         if self.mesh is not None:
@@ -274,23 +361,62 @@ class BatchedExtractor:
             for j, i in enumerate(idx):
                 out[i] = o[j]
 
-        for gkey, idxs in groups.items():
+        for gkey, idxs, payload in entries:
             fn = fn_for_key(gkey)
             bs = batch_size or max(n_data, len(idxs))
             bs = int(math.ceil(bs / n_data)) * n_data
             pending = None
             for s in range(0, len(idxs), bs):
                 chunk = idxs[s : s + bs]
-                filled = chunk + [chunk[0]] * (bs - len(chunk))
-                cols = zip(*(arrays_for_case(i) for i in filled))
-                stacked = tuple(jnp.asarray(np.stack(c)) for c in cols)
-                fut = fn(*stacked)
+                fut = fn(*make_chunk(payload, s, chunk, bs))
                 if pending is not None:
                     drain(pending)
                 pending = (chunk, fut)
             if pending is not None:
                 drain(pending)
         return out
+
+    def _run_grouped(self, groups, fn_for_key, arrays_for_case,
+                     batch_size=None):
+        """Grouped batch driver over host per-case arrays.
+
+        ``groups`` maps a compile key to case indices; ``arrays_for_case``
+        returns the per-case input arrays to stack.  Chunks are padded
+        with copies of their first element.
+        """
+
+        def make_chunk(_, s, chunk, bs):
+            filled = chunk + [chunk[0]] * (bs - len(chunk))
+            cols = zip(*(arrays_for_case(i) for i in filled))
+            return tuple(jnp.asarray(np.stack(c)) for c in cols)
+
+        return self._drive(
+            ((k, idxs, None) for k, idxs in groups.items()),
+            fn_for_key, make_chunk, batch_size,
+        )
+
+    def _run_stacked(self, entries, fn_for_key, batch_size=None):
+        """Driver over PRE-STACKED device groups (the device pass-2b feed).
+
+        ``entries`` is the pass-1 device output: ``(key, idxs, arrays)``
+        tuples whose ``arrays`` are stacked device arrays with leading dim
+        >= len(idxs) (mesh padding rows, if any, are simply never read).
+        Chunks are sliced straight off the device stacks -- no host
+        re-stacking between the passes.
+        """
+
+        def make_chunk(arrays, s, chunk, bs):
+            sl = tuple(a[s : s + len(chunk)] for a in arrays)
+            if len(chunk) < bs:
+                sl = tuple(
+                    jnp.concatenate(
+                        [a, jnp.repeat(a[:1], bs - len(chunk), axis=0)]
+                    )
+                    for a in sl
+                )
+            return sl
+
+        return self._drive(entries, fn_for_key, make_chunk, batch_size)
 
     # -- pass 1 -------------------------------------------------------------
 
@@ -305,14 +431,17 @@ class BatchedExtractor:
         mp = np.pad(m, pad)
         fields, n = _fields_count(jnp.asarray(mp), jnp.asarray(sp))
         n = int(n)
-        verts, vmask = _compact_cap(fields, ops.vertex_bucket(n))
+        cap = ops.vertex_bucket(n)
+        verts, vmask = _compact_cap(fields, cap)
+        if not self.device_compact:  # PR 2 host path: pull to numpy per case
+            verts, vmask = np.asarray(verts), np.asarray(vmask)
         return _Prepped(
             mask=mp, spacing=sp, shape=b.shape,
-            verts=np.asarray(verts), vmask=np.asarray(vmask), n_vertices=n,
+            verts=verts, vmask=vmask, n_vertices=n, vertex_cap=cap,
         )
 
     def _prune_pass(self, prepped: list[_Prepped]):
-        """Pass 1b: vmapped exact pruning bound per original-cap group."""
+        """Pass 1b (host path): vmapped bound + per-case host compaction."""
         cap_groups = group_indices(
             [None if p.mask is None else len(p.verts) for p in prepped]
         )
@@ -324,7 +453,77 @@ class BatchedExtractor:
             )
             for i, (v2, m2, info) in zip(idxs, batch):
                 prepped[i].verts, prepped[i].vmask = v2, m2
+                prepped[i].vertex_cap = len(v2)
                 prepped[i].prune_info = info
+
+    def _prune_pass_device(self, prepped: list[_Prepped]):
+        """Pass 1b+1c (device path): sharded bound + on-device compaction.
+
+        Per original-cap group, ONE (sharded) vmapped bound launch computes
+        every keep mask, one small (B,) count fetch sizes the ragged M'
+        buckets, and one (sharded) batched segmented-compaction launch per
+        target bucket scatters the survivors -- the vertex data itself
+        never leaves the device.  Decisions (pruned or keep-originals) come
+        from ``prune.plan_compaction``, the same rule the host path
+        composes, so the two paths stay bit-identical.
+
+        Returns the pass-2b feed: ``[(M' bucket, case indices, (verts,
+        vmask) stacks)]`` -- already-bucketed device stacks the diameter
+        sweep consumes directly (``_run_stacked``), which is what lets the
+        two passes pipeline with no host re-stacking in between.
+        """
+        entries = []
+        cap_groups = group_indices(
+            [None if p.mask is None else len(p.verts) for p in prepped]
+        )
+        for cap, idxs in cap_groups.items():
+            b = len(idxs)
+            verts, masks = self._pad_batch(
+                (
+                    jnp.stack([prepped[i].verts for i in idxs]),
+                    jnp.stack([prepped[i].vmask for i in idxs]),
+                ),
+                b,
+            )
+            keep, counts = self._bound_fn(cap)(verts, masks)
+            # the one host sync of pass 1: a small (B, 2) count matrix
+            counts = np.asarray(counts)
+            plans = [
+                prune_kernels.plan_compaction(
+                    cap, int(counts[j, 0]), int(counts[j, 1]),
+                    ops.vertex_bucket,
+                )
+                for j in range(b)
+            ]
+            for j, i in enumerate(idxs):
+                prepped[i].prune_info = plans[j][1]
+                prepped[i].vertex_cap = plans[j][0] or cap
+            # keep-originals cases feed pass 2 at their input cap
+            groups = group_indices(
+                [cap_out if cap_out else ("orig", cap) for cap_out, _ in plans]
+            )
+            for gkey, js in groups.items():
+                # whole cap group agreeing on one target reuses the stacks
+                take = (
+                    None if len(js) == b
+                    else jnp.asarray(np.asarray(js, np.int32))
+                )
+
+                def sub(*arrays):
+                    if take is None:
+                        return arrays
+                    return self._pad_batch(
+                        tuple(jnp.take(a, take, axis=0) for a in arrays),
+                        len(js),
+                    )
+
+                gidxs = [idxs[j] for j in js]
+                if isinstance(gkey, tuple):  # unpruned: originals, input cap
+                    entries.append((cap, gidxs, sub(verts, masks)))
+                    continue
+                cv, cm = self._compact_fn(cap, gkey)(*sub(verts, keep))
+                entries.append((gkey, gidxs, (cv, cm)))
+        return entries
 
     # -- public API ---------------------------------------------------------
 
@@ -377,14 +576,18 @@ class BatchedExtractor:
             cases_per_second=len(cases) / dt if dt > 0 else float("inf"),
             data_parallel=n_data,
             two_pass=self.prune,
+            device_compact=self.prune and self.device_compact,
         )
         return results, stats
 
     def _run_two_pass(self, cases, batch_size):
-        # pass 1: prep + vmapped pruning bound
+        # pass 1: prep + vmapped pruning bound + (device) compaction
         prepped = [self._prep_case(*c) for c in cases]
         t1 = time.perf_counter()
-        self._prune_pass(prepped)
+        if self.device_compact:
+            entries = self._prune_pass_device(prepped)
+        else:
+            self._prune_pass(prepped)
         t_prune = time.perf_counter() - t1
 
         # pass 2a: fused MC per shape bucket
@@ -394,15 +597,19 @@ class BatchedExtractor:
             lambda i: (prepped[i].mask, prepped[i].spacing),
             batch_size,
         )
-        # pass 2b: diameter sweep per pruned vertex bucket
-        d_out = self._run_grouped(
-            group_indices(
-                [None if p.mask is None else len(p.verts) for p in prepped]
-            ),
-            self._diam_fn,
-            lambda i: (prepped[i].verts, prepped[i].vmask),
-            batch_size,
-        )
+        # pass 2b: diameter sweep per pruned vertex bucket -- the device
+        # path consumes pass 1's already-bucketed stacks directly
+        if self.device_compact:
+            d_out = self._run_stacked(entries, self._diam_fn, batch_size)
+        else:
+            d_out = self._run_grouped(
+                group_indices(
+                    [None if p.mask is None else len(p.verts) for p in prepped]
+                ),
+                self._diam_fn,
+                lambda i: (prepped[i].verts, prepped[i].vmask),
+                batch_size,
+            )
 
         results = []
         for i, p in enumerate(prepped):
@@ -421,7 +628,7 @@ class BatchedExtractor:
         stats = {
             "buckets": len({p.shape for p in prepped if p.shape is not None}),
             "vertex_buckets": len(
-                {len(p.verts) for p in prepped if p.verts is not None}
+                {p.vertex_cap for p in prepped if p.vertex_cap}
             ),
             "pruned_cases": len(pruned),
             "empty_cases": sum(1 for p in prepped if p.mask is None),

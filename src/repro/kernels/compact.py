@@ -1,0 +1,143 @@
+"""Device-resident segmented survivor compaction (pass 1b of the pipeline).
+
+PR 2's two-pass pipeline computes the exact pruning bound as one vmapped
+kernel but then compacts each case's survivors HOST-side (``np.nonzero`` +
+``np.pad`` per case) -- the last CPU<->device round trip between pass 1 and
+pass 2, exactly the ping-pong PyRadiomics-cuda exists to eliminate.  This
+module is the device-side replacement: a **segmented compaction** primitive
+that scatters the survivors of a keep mask into the first M' slots of a
+static M'-bucket, batched over a stack of same-cap cases, so pass 1 emits
+already-bucketed ``(verts, vmask)`` device arrays that feed pass 2 directly.
+
+Semantics (shared by both paths, and by the host path they replace):
+
+  * survivors keep their original relative order (stable compaction);
+  * slot ``j`` of the output holds the j-th survivor; slots ``>= M'`` are
+    zero with a False mask -- bit-identical to the host path's
+    ``verts[np.nonzero(keep)]`` + zero ``np.pad``;
+  * survivors beyond the cap are dropped (callers size the cap from the
+    survivor count, so this only happens under a deliberately small cap);
+  * the returned count ``n`` is the TOTAL survivor count (pre-drop),
+    matching ``ref.compact_vertices``.
+
+Two implementations:
+
+``compact_batch_ref``
+    jnp reference/oracle: exclusive prefix sum over the mask gives each
+    survivor its output slot; a ``mode='drop'`` scatter writes them.  Runs
+    on any backend; this is also the 'ref' dispatch target.
+
+``compact_batch_pallas``
+    Pallas TPU kernel.  The grid walks ``(case, block)``; an SMEM scalar
+    carries the running survivor count across a case's sequential blocks
+    (the same revisited-accumulator idiom as the diameter 'seqacc'
+    variant), and the per-block scatter is realised as a one-hot matmul:
+    ``out += verts_block (3, B) @ onehot (B, cap)`` where
+    ``onehot[i, j] = keep_i & (prefix_i == j)``.  A 0/1 matmul copies
+    floats exactly (x * 1.0 + 0.0 terms), so the result is bit-identical
+    to the reference path.  Scatter-by-matmul keeps the store pattern
+    static -- the MXU-native way to compact on TPU, where per-element
+    dynamic stores are not an option.  ``block`` is the autotuned axis
+    (``runtime/autotune`` sweeps it per M bucket).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = 256
+
+
+def _compact_one_ref(verts, keep, cap: int):
+    """Single-case jnp compaction: (M, 3), (M,) -> (cap, 3), (cap,), n."""
+    k = keep.astype(bool)
+    ki = k.astype(jnp.int32)
+    pos = jnp.cumsum(ki) - 1  # exclusive prefix sum = output slot
+    # non-survivors (and survivors past the cap) land out of bounds: dropped
+    idx = jnp.where(k, pos, cap)
+    out = jnp.zeros((cap, 3), jnp.float32).at[idx].set(verts, mode="drop")
+    n = jnp.sum(ki)
+    mask = jnp.arange(cap, dtype=jnp.int32) < jnp.minimum(n, cap)
+    return out, mask, n
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def compact_batch_ref(verts, keep, cap: int):
+    """Batched reference compaction.
+
+    ``verts``: (B, M, 3), ``keep``: (B, M) -> ``(out, mask, n)`` with
+    ``out``: (B, cap, 3) float32, ``mask``: (B, cap) bool, ``n``: (B,) int32.
+    """
+    verts = jnp.asarray(verts, jnp.float32)
+    keep = jnp.asarray(keep)
+    return jax.vmap(lambda v, k: _compact_one_ref(v, k, cap))(verts, keep)
+
+
+def _compact_kernel(kref, vref, vout, base, *, block: int, cap: int):
+    b, t = pl.program_id(0), pl.program_id(1)
+    del b  # the grid's case axis is routed entirely by the BlockSpecs
+
+    @pl.when(t == 0)
+    def _():  # new case: reset the accumulator block + running offset
+        vout[...] = jnp.zeros_like(vout)
+        base[0] = 0
+
+    ki = (kref[0, 0, :] > 0.0).astype(jnp.int32)  # (block,)
+    pos = jnp.cumsum(ki) - 1 + base[0]  # global output slot per survivor
+    cols = jax.lax.broadcasted_iota(jnp.int32, (block, cap), 1)
+    onehot = ((pos[:, None] == cols) & (ki[:, None] > 0)).astype(jnp.float32)
+    # scatter-by-matmul: each output column receives exactly one survivor
+    # (slots are unique), every other term is x * 0.0 -- exact in f32
+    vout[0] += jax.lax.dot_general(
+        vref[0],
+        onehot,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    base[0] = base[0] + jnp.sum(ki)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cap", "block", "interpret")
+)
+def compact_batch_pallas(
+    verts, keep, cap: int, *, block: int = DEFAULT_BLOCK,
+    interpret: bool = False
+):
+    """Batched Pallas segmented compaction; same contract as the ref path.
+
+    ``verts``: (B, M, 3), ``keep``: (B, M) -> ``(out, mask, n)``.  The grid
+    is ``(B, M/block)``; case ``b``'s blocks run sequentially, carrying the
+    survivor offset in SMEM, and revisit one (3, cap) output accumulator.
+    """
+    verts = jnp.asarray(verts, jnp.float32)
+    kf = jnp.asarray(keep).astype(jnp.float32)
+    B, M, _ = verts.shape
+    nb = max(1, -(-M // block))
+    pad = nb * block - M
+    v = jnp.pad(verts, ((0, 0), (0, pad), (0, 0))).transpose(0, 2, 1)
+    km = jnp.pad(kf, ((0, 0), (0, pad)))[:, None, :]  # (B, 1, nb*block)
+
+    out = pl.pallas_call(
+        functools.partial(_compact_kernel, block=block, cap=cap),
+        grid=(B, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, block), lambda b, t: (b, 0, t)),
+            pl.BlockSpec((1, 3, block), lambda b, t: (b, 0, t)),
+        ],
+        out_specs=pl.BlockSpec((1, 3, cap), lambda b, t: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 3, cap), jnp.float32),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(km, v)
+
+    n = jnp.sum(kf > 0.0, axis=1).astype(jnp.int32)  # (B,)
+    mask = (
+        jax.lax.broadcasted_iota(jnp.int32, (B, cap), 1)
+        < jnp.minimum(n, cap)[:, None]
+    )
+    return out.transpose(0, 2, 1), mask, n

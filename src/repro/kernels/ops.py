@@ -101,13 +101,40 @@ def prune_candidates(verts, mask, k_dirs: int = 16):
     return _rebucket_pruned(verts, mask, v2, m2, info)
 
 
+def compact_survivors_batch(verts, keep, cap: int, *, backend=None,
+                            block="auto"):
+    """Batched device-resident segmented compaction (pass 1b).
+
+    Scatters each case's keep-mask survivors into the first M' slots of a
+    static ``cap`` bucket (stable order, zero padding -- bit-identical to
+    the host ``np.nonzero`` + ``np.pad`` path it replaces).  ``verts``:
+    (B, M, 3), ``keep``: (B, M) -> ``(out, mask, n)`` device arrays with
+    ``out``: (B, cap, 3), ``mask``: (B, cap) bool, ``n``: (B,) int32 total
+    survivor counts.  ``block='auto'`` resolves the measured-best scatter
+    block for the M bucket from the autotune cache; resolution may sweep,
+    so traced callers must resolve it first via ``dispatcher.compact_config``.
+    """
+    from repro.kernels import compact as _compact
+
+    b = dispatcher.resolve_backend(backend)
+    if b == "ref":
+        return _compact.compact_batch_ref(verts, keep, cap)
+    blk = dispatcher.compact_config(b, np.shape(verts)[1], block)
+    return _compact.compact_batch_pallas(
+        verts, keep, cap, block=blk, **dispatcher.kernel_kwargs(b)
+    )
+
+
 def prune_candidates_batch(verts, masks, k_dirs: int = 16):
     """Batched :func:`prune_candidates` for a (B, M, 3) stack of cases.
 
     The keep-mask bound runs as ONE vmapped kernel over the whole stack
     (the two-pass pipeline's pass 1); compaction + re-bucketing are per
-    case because the pruned counts M' are ragged.  Returns a list of B
-    ``(verts', mask', info)`` triples.
+    case HOST-side because the pruned counts M' are ragged.  Returns a
+    list of B ``(verts', mask', info)`` triples.  This is the
+    ``device_compact=False`` path of the batched pipeline; the default
+    device-resident path pairs :func:`repro.kernels.prune.keep_mask_batch`
+    with :func:`compact_survivors_batch` instead.
     """
     from repro.kernels import prune as _prune
 

@@ -199,11 +199,39 @@ def prune_vertices(verts, mask, k_dirs: int = 16):
 
 
 @functools.partial(jax.jit, static_argnames=("k_dirs",))
-def _keep_mask_batch(verts, masks, k_dirs: int):
+def keep_mask_batch(verts, masks, k_dirs: int = 16):
+    """Vmapped :func:`candidate_keep_mask` over a (B, M, 3) stack.
+
+    The two-pass pipeline's pass-1 bound: ONE launch computes every case's
+    keep mask.  Device in/out -- both the host compaction path
+    (:func:`prune_vertices_batch`) and the device compaction path
+    (``kernels/compact``) consume the same masks.
+    """
     keep, lower = jax.vmap(
         lambda v, m: candidate_keep_mask(v, m, k_dirs=k_dirs)
     )(verts, masks)
     return keep, lower
+
+
+def plan_compaction(m_total: int, m_valid: int, m_kept: int, bucket_fn):
+    """Shared pruned/kept decision for both compaction paths.
+
+    Composes the degenerate-input rule of :func:`_compact_survivors`
+    (fewer than 2 valid or surviving vertices, or nothing pruned -> keep
+    the originals) with the re-bucketing rule of
+    ``ops._rebucket_pruned`` (a survivor bucket no smaller than the input
+    wins nothing -> keep the originals).  Returns ``(cap, info)`` where
+    ``cap`` is the M' bucket to compact into, or ``None`` when the case
+    keeps its original arrays.  Both the host path and the device path
+    derive their ``PruneInfo`` from this single function, so the two can
+    never drift.
+    """
+    if m_valid < 2 or m_kept < 2 or m_kept >= m_valid:
+        return None, PruneInfo(m_total, m_valid, m_valid, False)
+    cap = int(bucket_fn(m_kept))
+    if cap >= m_total:
+        return None, PruneInfo(m_total, m_valid, m_valid, False)
+    return cap, PruneInfo(m_total, m_valid, m_kept, True)
 
 
 def prune_vertices_batch(verts, masks, k_dirs: int = 16):
@@ -221,7 +249,7 @@ def prune_vertices_batch(verts, masks, k_dirs: int = 16):
     """
     verts_np = np.asarray(verts, np.float32)
     masks_np = np.asarray(masks).astype(bool)
-    keep, _ = _keep_mask_batch(verts_np, masks_np, k_dirs)
+    keep, _ = keep_mask_batch(verts_np, masks_np, k_dirs)
     keep = np.asarray(keep)
     return [
         _compact_survivors(v, m, k)

@@ -81,6 +81,30 @@ def shard_map_compat(f, mesh, in_specs, out_specs, check: bool = True):
     )
 
 
+def data_parallel_map(fn, mesh: Mesh | None = None, axis: str = "data",
+                      check: bool = True):
+    """Shard a batched device function over ``axis`` of a mesh.
+
+    ``fn`` maps arrays with a leading batch dimension to arrays with the
+    same leading dimension (e.g. the pipeline's vmapped pass-1 pruning
+    bound or the batched segmented compaction).  With a mesh the batch
+    axis is split over ``axis`` via :func:`shard_map_compat`, so N devices
+    process N slices concurrently; with no mesh (or a mesh without the
+    axis) this is a plain ``jax.jit`` -- a strict no-op fallback, which is
+    what lets the same pipeline code run on CPU and on a pod.  ``mesh``
+    defaults to the ambient :func:`use_mesh` context.  Callers pad the
+    batch to a multiple of the axis size (shard_map shapes are uniform).
+    """
+    mesh = mesh if mesh is not None else active_mesh()
+    if mesh is None or axis not in mesh.shape:
+        return jax.jit(fn)
+    spec = PartitionSpec(axis)
+    return jax.jit(
+        shard_map_compat(fn, mesh=mesh, in_specs=spec, out_specs=spec,
+                         check=check)
+    )
+
+
 @contextlib.contextmanager
 def use_mesh(mesh: Mesh | None, rules: dict | None = None):
     """Activate a mesh + ruleset for logical constraints and pspec lookup."""

@@ -13,8 +13,9 @@ choice to every later call -- the TPU analogue of a CUDA occupancy/launch-
 bound autotuner.
 
 Cache schema (versioned): one JSON object ``{"schema": 2, "entries": {...}}``
-with entries keyed ``"diameter/<backend>/M<bucket>"`` and
-``"mc/<backend>/S<nx>x<ny>x<nz>"``; each record holds the winning
+with entries keyed ``"diameter/<backend>/M<bucket>"``,
+``"mc/<backend>/S<nx>x<ny>x<nz>"``, and ``"compact/<backend>/M<bucket>"``
+(the segmented-compaction scatter block); each record holds the winning
 configuration plus the full measured table (microseconds), so the sweep is
 also a persisted perf trajectory.  PR 1 wrote a *flat* ``{key: record}``
 object (schema v1); loads migrate it transparently and the next ``put``
@@ -51,6 +52,8 @@ DEFAULT_BLOCKS = (128, 256, 512)
 DEFAULT_MC_BLOCKS = ((8, 8, 8), (16, 8, 8), (8, 8, 16), (16, 16, 8))
 DEFAULT_MC_CHUNKS = (256, 512, 1024)
 
+DEFAULT_COMPACT_BLOCKS = (128, 256, 512)
+
 
 @dataclasses.dataclass(frozen=True)
 class DiameterConfig:
@@ -64,8 +67,14 @@ class MCConfig:
     chunk: int
 
 
+@dataclasses.dataclass(frozen=True)
+class CompactConfig:
+    block: int
+
+
 DEFAULT_CONFIG = DiameterConfig("seqacc", 256)
 DEFAULT_MC_CONFIG = MCConfig((8, 8, 8), 512)
+DEFAULT_COMPACT_CONFIG = CompactConfig(256)
 
 
 def cache_path() -> str:
@@ -140,6 +149,10 @@ def sweep_key(bucket: int, backend: str) -> str:
 def mc_key(shape, backend: str) -> str:
     nx, ny, nz = (int(s) for s in shape)
     return f"mc/{backend}/S{nx}x{ny}x{nz}"
+
+
+def compact_key(bucket: int, backend: str) -> str:
+    return f"compact/{backend}/M{int(bucket)}"
 
 
 def mc_shape_bucket(shape, step: int = 32) -> tuple[int, int, int]:
@@ -427,6 +440,115 @@ def get_mc_config(
             "block": list(best.block),
             "chunk": best.chunk,
             "us": table[f"{best.block[0]}x{best.block[1]}x{best.block[2]}/{best.chunk}"],
+            "table": table,
+            "swept_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        },
+    )
+    return best
+
+
+# ---------------------------------------------------------------------------
+# segmented-compaction scatter-block sweep
+# ---------------------------------------------------------------------------
+
+
+def measure_compact_config(
+    bucket: int,
+    backend: str,
+    block: int,
+    *,
+    repeat: int = 2,
+    warmup: int = 1,
+    seed: int = 0,
+) -> float:
+    """Best-of-``repeat`` wall-clock seconds for one compaction block.
+
+    The probe keeps ~25% of a ``(4, bucket)`` batch -- the pipeline's
+    typical keep fraction -- and compacts into the ``bucket // 4`` bucket,
+    so the measured trade-off (grid steps vs per-step one-hot matmul size)
+    matches the production scatter.
+    """
+    from repro.core import dispatcher
+    from repro.kernels import compact as ck
+
+    rng = np.random.default_rng(seed)
+    verts = np.asarray(rng.normal(size=(4, bucket, 3)) * 10.0, np.float32)
+    keep = rng.random((4, bucket)) < 0.25
+    cap = max(512, int(bucket) // 4)
+    kw = dispatcher.kernel_kwargs(backend)
+
+    def call():
+        return ck.compact_batch_pallas(verts, keep, cap, block=block, **kw)
+
+    for _ in range(warmup):
+        jax.block_until_ready(call())
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(call())
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def sweep_compact(
+    bucket: int,
+    backend: str,
+    *,
+    blocks=DEFAULT_COMPACT_BLOCKS,
+    repeat: int = 2,
+):
+    """Measure every compaction block candidate; returns (best, table).
+
+    ``table`` maps ``str(block)`` to measured microseconds.  Blocks larger
+    than the bucket only pad the grid, so they are dropped (the smallest
+    candidate is clamped in when all are too big), mirroring the diameter
+    sweep's policy.
+    """
+    usable = [b for b in blocks if b <= bucket] or [min(min(blocks), bucket)]
+    table: dict[str, float] = {}
+    best, best_t = None, float("inf")
+    for block in usable:
+        t = measure_compact_config(bucket, backend, block, repeat=repeat)
+        table[str(block)] = t * 1e6
+        if t < best_t:
+            best, best_t = CompactConfig(block), t
+    return best, table
+
+
+def get_compact_config(
+    bucket: int,
+    backend: str,
+    *,
+    cache: AutotuneCache | None = None,
+    blocks=DEFAULT_COMPACT_BLOCKS,
+    repeat: int = 2,
+) -> CompactConfig:
+    """Cached-or-swept best compaction scatter block for an M bucket.
+
+    Same contract as :func:`get_diameter_config`: cache hit -> no kernel
+    runs; miss sweeps when allowed and persists winner + table; disallowed
+    sweeps return the default uncached.
+    """
+    if backend == "ref":
+        return DEFAULT_COMPACT_CONFIG
+    cache = cache or AutotuneCache()
+    key = compact_key(bucket, backend)
+    hit = cache.get(key)
+    if hit is not None:
+        try:
+            cfg = CompactConfig(int(hit["block"]))
+        except (KeyError, TypeError, ValueError):
+            cfg = None
+        if cfg is not None and cfg.block > 0:
+            return cfg
+    if not _sweep_allowed(backend):
+        return DEFAULT_COMPACT_CONFIG
+    best, table = sweep_compact(bucket, backend, blocks=blocks, repeat=repeat)
+    cache.put(
+        key,
+        {
+            "block": best.block,
+            "us": table[str(best.block)],
             "table": table,
             "swept_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
         },

@@ -1,0 +1,108 @@
+"""f32 augmented-Gram precision guardrail at paper-scale coordinates.
+
+The 'gram' diameter variant computes |r - c|^2 on the MXU via the augmented
+Gram identity |r|^2 + |c|^2 - 2<r, c> in f32 -- numerically looser than the
+subtract-square sweep because the norm terms grow with the coordinate
+magnitude while the distance does not.  The ROADMAP documents a 1e-3
+relative bound for it; this suite *characterizes* that bound at the
+coordinate scale the paper's workload actually produces (CT mm-spacing
+times up-to-512^3 voxel extents, plus a scanner-frame origin offset)
+against an f64 oracle, and fails loudly if either
+
+  * the kernel regresses PAST the documented bound (a real precision bug), or
+  * the baseline subtract-square variant stops being the tight reference
+    the bound is measured against.
+
+If a future PR tightens the documented tolerance, this is the test that
+must be re-derived first (see the ROADMAP 'Gram-kernel precision
+guardrail' item: a compensated/centred formulation is the known fix).
+"""
+import numpy as np
+import pytest
+
+from repro.kernels import diameter as dk
+
+pytestmark = pytest.mark.tier1
+
+GRAM_RTOL = 1e-3  # the documented bound (kernels/diameter docstring, ROADMAP)
+BASELINE_RTOL = 1e-5  # subtract-square stays ~f32-rounding tight
+
+
+def _paper_scale_cloud(seed: int, m: int = 384, offset_mm: float = 0.0):
+    """Vertices at KITS19-like physical scale: mm spacing x 512^3 extent."""
+    rng = np.random.default_rng(seed)
+    spacing = np.array([0.7, 0.7, 5.0])  # axial CT voxel spacing (mm)
+    extent = np.array([512, 512, 512], np.float64)
+    idx = rng.uniform(0.0, 1.0, size=(m, 3)) * extent
+    return (idx * spacing + offset_mm).astype(np.float32)
+
+
+def _diameters_f64(verts: np.ndarray) -> np.ndarray:
+    v = verts.astype(np.float64)
+    d = v[:, None, :] - v[None, :, :]
+    q = d * d
+    planes = (q.sum(-1), q[..., 0] + q[..., 1], q[..., 0] + q[..., 2],
+              q[..., 1] + q[..., 2])
+    return np.sqrt(np.asarray([p.max() for p in planes]))
+
+
+def _variant(verts, variant):
+    mask = np.ones(len(verts), np.float32)
+    return np.asarray(
+        dk.max_diameters_pallas(
+            verts, mask, block=128, variant=variant, interpret=True
+        ),
+        np.float64,
+    )
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_gram_error_within_documented_bound(seed):
+    verts = _paper_scale_cloud(seed)
+    want = _diameters_f64(verts)
+    rel = np.abs(_variant(verts, "gram") - want) / want
+    assert rel.max() < GRAM_RTOL, (
+        f"gram f32 relative error {rel.max():.2e} exceeds the documented "
+        f"{GRAM_RTOL:.0e} bound at paper-scale coordinates (seed {seed})"
+    )
+
+
+@pytest.mark.parametrize("offset_mm", [500.0, 1500.0])
+def test_gram_bound_survives_scanner_frame_offsets(offset_mm):
+    """Un-centred scanner coordinates inflate |r|^2 without growing the
+    distance -- the gram variant's worst realistic case.  The documented
+    bound must hold here too (the pipeline crops to the ROI origin, so
+    production inputs are strictly easier than this)."""
+    verts = _paper_scale_cloud(17, offset_mm=offset_mm)
+    want = _diameters_f64(verts)
+    rel = np.abs(_variant(verts, "gram") - want) / want
+    assert rel.max() < GRAM_RTOL, (offset_mm, rel.max())
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_baseline_variant_is_the_tight_reference(seed):
+    """seqacc (subtract-square) must stay ~f32-rounding accurate at the
+    same scale: it is the reference the 1e-3 gram bound is measured
+    against, and the parity oracle the pruning exactness argument uses."""
+    verts = _paper_scale_cloud(seed)
+    want = _diameters_f64(verts)
+    rel = np.abs(_variant(verts, "seqacc") - want) / want
+    assert rel.max() < BASELINE_RTOL, rel.max()
+
+
+def test_bound_is_calibrated_not_vacuous():
+    """The guardrail must measure the real error regime: if the gram error
+    at paper scale collapsed to baseline levels, the documented 1e-3 bound
+    (and the ROADMAP note about a compensated formulation) would be stale
+    -- surface that instead of silently over-promising.  Measured f32
+    error for an exactly-representable oracle sits well above zero."""
+    worst = 0.0
+    for seed in range(6):
+        verts = _paper_scale_cloud(seed)
+        want = _diameters_f64(verts)
+        worst = max(worst, float(np.max(np.abs(_variant(verts, "gram") - want) / want)))
+    assert worst < GRAM_RTOL
+    assert worst > 1e-9, (
+        f"gram error {worst:.2e} is now at f64-oracle noise level; the "
+        "documented 1e-3 bound and this guardrail need re-deriving"
+    )

@@ -13,7 +13,11 @@ pipeline's pass 1):
   3. pruning (and the vmapped batched bound) is diameter-invariant under
      input permutation -- bit-identical on the Pallas kernels;
   4. the pipeline's re-bucketing partition never drops or duplicates a
-     case index.
+     case index;
+  5. segmented compaction (kernels/compact, pass 1c of the device-resident
+     pipeline) preserves the survivor count, keeps the original order
+     stable, never leaks a non-survivor past M', and the Pallas kernel is
+     bit-identical to the jnp reference for every block size.
 """
 import numpy as np
 import pytest
@@ -21,6 +25,7 @@ from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
 from repro.core.pipeline import group_indices
+from repro.kernels import compact as ck
 from repro.kernels import diameter as dk
 from repro.kernels import ops, prune
 
@@ -113,6 +118,55 @@ def test_batched_bound_matches_single_diameters(seed, b, m):
         got = np.asarray(dk.max_diameters_sq_pallas(v2, m2, block=64, interpret=True))
         want = np.asarray(dk.max_diameters_sq_pallas(sv, sm, block=64, interpret=True))
         np.testing.assert_array_equal(got, want)
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    m=st.integers(1, 300),
+    cap_exp=st.integers(4, 9),
+    frac=st.floats(0.0, 1.0),
+)
+@settings(**_SETTINGS)
+def test_segmented_compaction_invariants(seed, m, cap_exp, frac):
+    """Count preserved, order stable, nothing leaks past M', zero padding."""
+    rng = np.random.default_rng(seed)
+    cap = 2**cap_exp
+    verts = (rng.normal(size=(m, 3)) * 30.0).astype(np.float32)
+    keep = rng.random(m) < frac
+    out, mask, n = (
+        np.asarray(x) for x in ck.compact_batch_ref(verts[None], keep[None], cap)
+    )
+    out, mask, n = out[0], mask[0], int(n[0])
+    assert n == int(keep.sum())  # survivor count preserved (pre-drop)
+    k = min(n, cap)
+    np.testing.assert_array_equal(out[:k], verts[keep][:cap])  # stable order
+    assert mask[:k].all() and not mask[k:].any()  # no leak past M'
+    assert np.all(out[k:] == 0.0)  # padding exactly zero
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    m=st.integers(1, 260),
+    frac=st.floats(0.0, 1.0),
+    block=st.sampled_from([64, 128, 256]),
+)
+@settings(**_SETTINGS)
+def test_pallas_compaction_bit_identical_to_ref(seed, m, frac, block):
+    """The one-hot-matmul scatter kernel == the jnp scatter, bit for bit,
+    for every scatter block size (the autotuned axis must be value-free)."""
+    rng = np.random.default_rng(seed)
+    verts = (rng.normal(size=(2, m, 3)) * 50.0).astype(np.float32)
+    keep = rng.random((2, m)) < frac
+    cap = 128
+    want = [np.asarray(x) for x in ck.compact_batch_ref(verts, keep, cap)]
+    got = [
+        np.asarray(x)
+        for x in ck.compact_batch_pallas(
+            verts, keep, cap, block=block, interpret=True
+        )
+    ]
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
 
 
 @given(st.lists(st.one_of(st.none(), st.integers(0, 5)), max_size=48))
