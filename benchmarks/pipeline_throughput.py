@@ -4,18 +4,20 @@ The paper's motivating workload is ~40 000 CT scans on a cluster (xLUNGS);
 its discussion notes that for complete workflows data loading dominates
 small cases and DMA/compute overlap is the open opportunity.  This
 benchmark runs the BatchedExtractor over a batch of synthetic cases in
-four modes -- the single-case loop, the legacy one-pass batched pipeline
+six modes -- the single-case loop, the legacy one-pass batched pipeline
 (no pruning: the unpruned baseline), the two-pass pruned pipeline with
-PR 2's host-side survivor compaction (``device_compact=False``), and the
-default device-resident pipeline (pass 1 compacts survivors on device via
-``kernels/compact`` and feeds pass 2 directly) -- and reports cases/second
-for each, the throughput story GPU/TPU acceleration exists to serve.
+PR 2's host-side survivor compaction (``device_compact=False``), the
+device-resident counted pipeline (PR 3's default), the sync-free
+``schedule='static'`` pipeline (PR 4: zero pass-1 host fetches, padded
+pair-sweep work instead), and the streaming front-end
+(``extract_stream``, window overlap) -- and reports cases/second for
+each, the throughput story GPU/TPU acceleration exists to serve.
 
 ``run(records=...)`` appends one dict per mode; ``benchmarks.run
 --json-pipeline`` serialises them as the ``BENCH_pipeline.json``
 perf-trajectory record (cases/sec per mode across PRs; the
-``two_pass_device_compact`` row is PR 3's headline vs PR 2's
-``batched_two_pass_pruned``).
+``two_pass_static`` and ``streaming`` rows are PR 4's additions vs PR 3's
+``two_pass_device_compact``).
 """
 from __future__ import annotations
 
@@ -73,18 +75,35 @@ def run(n_cases: int = 12, records=None, repeat: int = 8):
     unpruned = BatchedExtractor(backend="ref", prune=False)
     pruned = BatchedExtractor(backend="ref", prune=True, device_compact=False)
     device = BatchedExtractor(backend="ref", prune=True, device_compact=True)
+    static = BatchedExtractor(backend="ref", schedule="static")
     # the unpruned baseline is ~15x slower per run: two measured runs
     # bound its noise well enough without dominating the bench's runtime
     ((res_u, stats_u),) = _best_interleaved((unpruned,), cases, 2)
-    # host- vs device-compaction is a ~5% contest: interleave their runs
-    # so machine-load drift cannot bias the recorded winner
-    (res_p, stats_p), (res_d, stats_d) = _best_interleaved(
-        (pruned, device), cases, repeat
+    # host- vs device-compaction vs static schedule are close contests:
+    # interleave their runs so machine-load drift cannot bias the winner
+    (res_p, stats_p), (res_d, stats_d), (res_s, stats_s) = _best_interleaved(
+        (pruned, device, static), cases, repeat
     )
-    assert all(r is not None for r in res_u + res_p + res_d)
+    assert all(r is not None for r in res_u + res_p + res_d + res_s)
     for a, b in zip(res_u, res_p):  # pruning must not move the features
         np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
     for a, b in zip(res_p, res_d):  # device compaction must not move a BIT
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(res_d, res_s):  # nor may the sync-free static schedule
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert stats_s["host_fetches"].get("pass1", 0) == 0  # the claim measured
+
+    # streaming front-end: same windows, prep of k+1 overlapping exec of k
+    def stream_once():
+        t0 = time.perf_counter()
+        rows = list(static.extract_stream(iter(cases), window=max(4, n_cases // 2)))
+        return rows, time.perf_counter() - t0
+
+    stream_once()  # warmup (compiles shared with static, but settle anyway)
+    res_st, t_stream = min(
+        (stream_once() for _ in range(max(2, repeat // 2))), key=lambda r: r[1]
+    )
+    for a, b in zip(res_d, res_st):  # streaming must not move a bit either
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
     def emit(name, seconds, stats=None, **extra):
@@ -130,6 +149,20 @@ def run(n_cases: int = 12, records=None, repeat: int = 8):
         keep_frac=f"{stats_d['mean_keep_fraction']:.3f}",
         speedup_vs_loop=f"{t_loop / stats_d['seconds']:.2f}",
         speedup_vs_host_compact=f"{stats_p['seconds'] / stats_d['seconds']:.2f}",
+    )
+    emit(
+        "two_pass_static", stats_s["seconds"], stats_s,
+        buckets=stats_s["buckets"],
+        vertex_buckets=stats_s["vertex_buckets"],
+        pass1_syncs=0,
+        speedup_vs_loop=f"{t_loop / stats_s['seconds']:.2f}",
+        speedup_vs_counted=f"{stats_d['seconds'] / stats_s['seconds']:.2f}",
+    )
+    emit(
+        "streaming", t_stream,
+        speedup_vs_loop=f"{t_loop / t_stream:.2f}",
+        speedup_vs_batched=f"{stats_s['seconds'] / t_stream:.2f}",
+        window=max(4, n_cases // 2),
     )
     return rows
 

@@ -21,6 +21,12 @@ python -m pytest -q -m tier1 tests/test_pipeline_pruned_batch.py \
     tests/test_gram_precision.py \
     tests/test_autotune_cache.py
 
+# 2b) streaming + static-schedule gates: extract_stream == run == single
+#     bit-identity, static == counted bit-identity (incl. the retry path),
+#     zero pass-1 host fetches under the static schedule, and device-pool
+#     MC == the host-stacked feed it replaced
+python -m pytest -q -m tier1 tests/test_plan_executor_stream.py
+
 # 3) kernel-wiring smoke: Fig.1 variant sweep (interpret mode) + the
 #    BENCH_diameter.json perf-trajectory record
 python -m benchmarks.run --only fig1 --json BENCH_diameter.json

@@ -2,12 +2,17 @@
 
 Public API:
     ShapeFeatureExtractor   -- PyRadiomics-compatible single-case extractor
-    BatchedExtractor        -- multi-case, mesh-sharded pipeline
+    BatchedExtractor        -- multi-case, mesh-sharded pipeline (facade over
+                               the plan/executor split)
+    ExtractionPlan          -- static per-window plan (repro.core.plan)
+    PlanExecutor            -- device-resident plan runner (repro.core.executor)
     resolve_backend         -- accelerator probe / CPU fallback (dispatcher)
 """
 from repro.core.dispatcher import resolve_backend, has_tpu
 from repro.core.shape_features import ShapeFeatureExtractor, StageTimes, crop_to_roi
 from repro.core.pipeline import BatchedExtractor, Bucket, assign_bucket
+from repro.core.plan import ExtractionPlan, build_plan, plan_from_metadata
+from repro.core.executor import PlanExecutor
 
 __all__ = [
     "ShapeFeatureExtractor",
@@ -18,4 +23,8 @@ __all__ = [
     "crop_to_roi",
     "resolve_backend",
     "has_tpu",
+    "ExtractionPlan",
+    "build_plan",
+    "plan_from_metadata",
+    "PlanExecutor",
 ]

@@ -54,30 +54,34 @@ def kernel_kwargs(backend: str) -> dict:
 
 
 def diameter_config(backend: str, bucket: int, variant: str = "auto",
-                    block: int | None = None):
+                    block: int | None = None, batch: int = 1):
     """Resolve the (variant, block) the diameter kernel should run with.
 
-    ``variant='auto'`` consults the measured autotune cache for the vertex
-    bucket (``repro.runtime.autotune``); explicit values pass through, and
-    an explicitly passed ``block`` always wins over the tuned one.  For the
+    ``variant='auto'`` consults the measured autotune cache for the
+    (vertex bucket, batch-depth bucket) pair -- the plan-aware key: the
+    executor passes the sub-batch depth a launch will actually carry
+    (``repro.runtime.autotune``).  Explicit values pass through, and an
+    explicitly passed ``block`` always wins over the tuned one.  For the
     'ref' backend the choice is moot and defaults are returned.
     """
     from repro.runtime import autotune  # local import: avoid cycle
 
     if variant != "auto":
         return variant, (block or autotune.DEFAULT_CONFIG.block)
-    cfg = autotune.get_diameter_config(int(bucket), backend)
+    cfg = autotune.get_diameter_config(int(bucket), backend, batch=batch)
     return cfg.variant, (block or cfg.block)
 
 
-def compact_config(backend: str, bucket: int, block="auto") -> int:
+def compact_config(backend: str, bucket: int, block="auto",
+                   batch: int = 1) -> int:
     """Resolve the segmented-compaction scatter block for an M bucket.
 
-    ``block='auto'`` consults the measured autotune cache for the input
-    vertex bucket (``repro.runtime.autotune``); explicit values pass
-    through.  For the 'ref' backend the choice is moot and the default is
-    returned.  Like the other config resolvers this may run a measuring
-    sweep, so call it OUTSIDE any traced function.
+    ``block='auto'`` consults the measured autotune cache for the (input
+    vertex bucket, batch-depth bucket) pair (``repro.runtime.autotune``);
+    explicit values pass through.  For the 'ref' backend the choice is
+    moot and the default is returned.  Like the other config resolvers
+    this may run a measuring sweep, so call it OUTSIDE any traced
+    function.
     """
     from repro.runtime import autotune  # local import: avoid cycle
 
@@ -85,18 +89,20 @@ def compact_config(backend: str, bucket: int, block="auto") -> int:
         return int(block)
     if backend == "ref":
         return autotune.DEFAULT_COMPACT_CONFIG.block
-    return autotune.get_compact_config(int(bucket), backend).block
+    return autotune.get_compact_config(int(bucket), backend, batch=batch).block
 
 
-def mc_config(backend: str, shape, block="auto", chunk: int | None = None):
+def mc_config(backend: str, shape, block="auto", chunk: int | None = None,
+              batch: int = 1):
     """Resolve the (brick, chunk) the marching-cubes kernel should run with.
 
-    ``block='auto'`` consults the measured autotune cache for the padded-
-    volume bucket of ``shape`` (``repro.runtime.autotune``); explicit values
-    pass through, and an explicitly passed ``chunk`` always wins over the
-    tuned one.  For the 'ref' backend the choice is moot and defaults are
-    returned.  Like ``diameter_config`` this may run a measuring sweep, so
-    call it OUTSIDE any traced function.
+    ``block='auto'`` consults the measured autotune cache for the
+    (padded-volume bucket of ``shape``, batch-depth bucket) pair
+    (``repro.runtime.autotune``); explicit values pass through, and an
+    explicitly passed ``chunk`` always wins over the tuned one.  For the
+    'ref' backend the choice is moot and defaults are returned.  Like
+    ``diameter_config`` this may run a measuring sweep, so call it
+    OUTSIDE any traced function.
     """
     from repro.runtime import autotune  # local import: avoid cycle
 
@@ -106,6 +112,6 @@ def mc_config(backend: str, shape, block="auto", chunk: int | None = None):
         cfg = autotune.DEFAULT_MC_CONFIG
     else:
         cfg = autotune.get_mc_config(
-            autotune.mc_shape_bucket(shape), backend
+            autotune.mc_shape_bucket(shape), backend, batch=batch
         )
     return cfg.block, int(chunk or cfg.chunk)

@@ -1,0 +1,830 @@
+"""Executor layer: runs :class:`~repro.core.plan.ExtractionPlan`s with a
+device-resident data plane.
+
+The planning/execution split (see ``core/plan``) gives this module a
+simple contract: ``submit_window`` turns one window of cases into device
+launches without data-dependent control flow, ``collect_window`` drains
+the results.  Everything between -- device pools, the sync-free static
+pass-1 chain, the double-buffered feeds, the streaming overlap -- lives
+here, behind the thin :class:`~repro.core.pipeline.BatchedExtractor`
+facade.
+
+Data plane (both passes device-resident):
+
+* **pass 0 (staging):** each case's cropped, bucket-padded mask goes to
+  the device once during host prep (async ``device_put``-style transfer
+  overlapping the next case's crop/pad); per shape bucket the staged
+  masks are stacked into a bucket-keyed **device pool** that both pass 1
+  (vertex fields) and pass 2a (MC) consume -- the per-chunk host
+  ``np.stack`` of PR 2/3 is gone;
+* **pass 1:** one (shard-able) bound + segmented-compaction chain per
+  cap group.  Under ``schedule='counted'`` the survivor counts are
+  fetched to size the ragged M' buckets (one small (B, 2) sync per cap
+  group -- the PR 3 behaviour and the parity baseline).  Under
+  ``schedule='static'`` the chain compacts straight into the plan's
+  static target and the counts ride along **as a device array**: pass 1
+  -> pass 2b is a single dispatch chain with ZERO host fetches (counted
+  by ``transfer_log`` and locked by a tier-1 test);
+* **pass 2a/2b:** grouped sub-batches sliced off the pools / pass-1
+  output stacks; every launch of a window is submitted before any result
+  is drained, so transfers and compute of chunk k+1 overlap chunk k.
+
+Static-schedule collect: the deferred (B, 2) count fetch happens at
+drain time, AFTER the diameter sweeps were dispatched.  Cases whose
+counted-schedule decision would have been "keep the originals" (the
+static target is exactly the counted win boundary -- ``core/plan``) are
+then re-swept once at their original cap from the retained device
+stacks; every other case's static result is already exact, because the
+aligned target guarantees no survivor was dropped.
+
+Streaming: ``extract_stream`` pipelines windows -- window k+1 is
+prepped/submitted while the device still executes window k (jax dispatch
+is async), then window k is drained and its rows yielded in input order.
+Under ``schedule='static'`` the submit path never blocks on the device,
+so the overlap is complete; under ``'counted'`` the pass-1 count fetch
+re-serialises part of it (the measured trade-off is recorded in
+ROADMAP.md).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import itertools
+import math
+import time
+from typing import Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import dispatcher
+from repro.core import plan as planlib
+from repro.core.shape_features import crop_to_roi
+from repro.kernels import ops
+from repro.kernels import prune as prune_kernels
+from repro.parallel import sharding as psharding
+from repro.runtime import autotune
+
+
+@dataclasses.dataclass
+class _Prepped:
+    """Pass-0 state for one case (None mask = empty-mask case).
+
+    ``mask`` is the bucket-padded mask, staged on device (the pool
+    entry); ``verts``/``vmask`` stay device-resident on the device-
+    compaction path and are host numpy on the legacy host path.
+    """
+
+    mask: object | None = None  # device-staged bucket-padded mask
+    spacing: np.ndarray | None = None
+    shape: tuple | None = None  # padded shape bucket (MC group key)
+    roi_shape: tuple | None = None  # pre-pad cropped shape (pad stats)
+    verts: object | None = None
+    vmask: object | None = None
+    n_vertices: int = 0  # pre-prune dedup vertex count (a feature)
+    vertex_cap: int = 0  # static M' bucket the diameter kernel compiles for
+    prune_info: object | None = None
+
+
+@dataclasses.dataclass
+class _Window:
+    """One submitted window: every launch issued, nothing drained yet."""
+
+    prepped: list
+    plan: planlib.ExtractionPlan
+    mc_futs: list
+    diam_futs: list
+    fused_futs: list
+    static_aux: list  # [(cap, idxs, counts_fut, verts, masks)] to resolve
+    t_prune: float
+
+
+@jax.jit
+def _fields_count(mask, spacing):
+    """Pass-0 compute: dedup vertex fields + active count, one compile per
+    shape bucket (the eager per-op path costs ~10x on a cold sweep)."""
+    fields = ops.vertex_fields(mask, 0.5, spacing)
+    return fields, ops.count_vertices(fields)
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def _compact_cap(fields, cap: int):
+    verts, vmask, _ = ops.compact_vertices(fields, cap)
+    return verts, vmask
+
+
+def _features_one(mask, spacing, vertex_cap, backend, variant, block=None,
+                  mc_block=None, mc_chunk=None):
+    mc_kw = {} if mc_block is None else {"block": mc_block, "chunk": mc_chunk}
+    vol, area = ops.mc_volume_area(mask, 0.5, spacing, backend=backend, **mc_kw)
+    fields = ops.vertex_fields(mask, 0.5, spacing)
+    verts, vmask, n = ops.compact_vertices(fields, vertex_cap)
+    d = ops.max_diameters(
+        verts, vmask, backend=backend, variant=variant, block=block
+    )
+    return jnp.concatenate(
+        [jnp.stack([vol, area]), d, jnp.asarray([n], jnp.float32)]
+    )  # (7,)
+
+
+class PlanExecutor:
+    """Plan-driven batched extraction engine (see module docstring).
+
+    Owns the compiled-function cache, the device pools, the submit/
+    collect drivers, and the ``transfer_log`` host-sync accounting.
+    ``BatchedExtractor`` is the public facade.
+    """
+
+    N_FEATURES = 7  # [vol, area, d3, dxy, dxz, dyz, n_vertices]
+
+    def __init__(self, backend=None, variant="auto", mesh: Mesh | None = None,
+                 data_axis: str = "data", prune: bool = True,
+                 mc_block="auto", mc_chunk: int | None = None,
+                 k_dirs: int = 16, device_compact: bool = True,
+                 compact_block="auto", schedule: str = "counted",
+                 transfer_callback=None):
+        self.backend = dispatcher.resolve_backend(backend)
+        self.variant = variant
+        if mesh is None:
+            # adopt the ambient use_mesh mesh only when it can actually
+            # shard the batch: train/serve meshes without a data axis must
+            # not turn a working CPU pipeline into a KeyError
+            ambient = psharding.active_mesh()
+            if ambient is not None and data_axis in ambient.shape:
+                mesh = ambient
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self.prune = prune
+        self.mc_block = mc_block
+        self.mc_chunk = mc_chunk
+        self.k_dirs = k_dirs
+        self.device_compact = device_compact
+        self.compact_block = compact_block
+        if schedule not in planlib.SCHEDULES:
+            raise ValueError(
+                f"schedule must be one of {planlib.SCHEDULES}, got {schedule!r}"
+            )
+        if schedule == "static" and not (prune and device_compact):
+            raise ValueError(
+                "schedule='static' is a device-resident schedule: it requires "
+                "prune=True and device_compact=True"
+            )
+        self.schedule = schedule
+        self.transfer_log = collections.Counter()
+        self._transfer_cb = transfer_callback
+        self._compiled = {}
+
+    # -- host-sync accounting ----------------------------------------------
+
+    def _fetch(self, stage: str, x) -> np.ndarray:
+        """The ONLY device->host fetch point of the executor.
+
+        Every host materialisation of a device value routes through here
+        so ``transfer_log`` is a complete per-stage sync census -- the
+        counter the zero-pass-1-fetch contract of ``schedule='static'``
+        is asserted against (tier-1).
+        """
+        self.transfer_log[stage] += 1
+        if self._transfer_cb is not None:
+            self._transfer_cb(stage, x)
+        return np.asarray(x)
+
+    # -- tuned-config resolution (outside any trace) ------------------------
+
+    def _resolve_mc(self, shape, depth: int = 1):
+        if self.backend == "ref":
+            return None, None
+        return dispatcher.mc_config(
+            self.backend, shape, self.mc_block, self.mc_chunk, batch=depth
+        )
+
+    def _resolve_diameter(self, cap, depth: int = 1):
+        if self.backend == "ref":
+            return self.variant, None
+        return dispatcher.diameter_config(
+            self.backend, cap, self.variant, batch=depth
+        )
+
+    def _resolve_compact(self, cap_in, depth: int = 1):
+        if self.backend == "ref":
+            return None
+        return dispatcher.compact_config(
+            self.backend, cap_in, self.compact_block, batch=depth
+        )
+
+    # -- compiled-function cache -------------------------------------------
+
+    def _dp_map(self, fn, check: bool = True):
+        """Shard a batched fn over the data axis (plain jit without a mesh).
+
+        ``check=False`` for batch fns that contain a ``pallas_call``:
+        jax's shard_map replication checker has no rule for it (the
+        documented workaround -- results are still bit-identical, locked
+        by tests/test_pipeline_multidevice.py).
+        """
+        return psharding.data_parallel_map(
+            fn, self.mesh, self.data_axis, check=check
+        )
+
+    def _pad_batch(self, arrays, n: int):
+        return psharding.pad_batch(arrays, n, self.mesh, self.data_axis)
+
+    def _bound_fn(self, cap: int, depth: int):
+        """Pass 1 (counted): sharded vmapped pruning bound + survivor counts.
+
+        Maps stacked ``(B, cap, 3)`` verts + ``(B, cap)`` masks to
+        ``(keep, counts)``; with a mesh the batch shards over the data
+        axis (``data_parallel_map`` is a plain jit without one).
+        """
+        key = ("prune_bound", cap, depth)
+        if key in self._compiled:
+            return self._compiled[key]
+        k_dirs = self.k_dirs
+
+        def batch(verts, masks):
+            keep, _ = prune_kernels.keep_mask_batch(verts, masks, k_dirs)
+            m_valid = jnp.sum(masks.astype(jnp.int32), axis=1)
+            m_kept = jnp.sum(keep.astype(jnp.int32), axis=1)
+            # counts ride out pre-stacked (B, 2) so the host fetch is one
+            # transfer with no eager stitching (batch dim first: shardable)
+            return keep, jnp.stack([m_valid, m_kept], axis=1)
+
+        fn = self._dp_map(batch)
+        self._compiled[key] = fn
+        return fn
+
+    def _compact_fn(self, cap_in: int, cap_out: int, depth: int):
+        """Pass 1 (counted): sharded batched compaction into the M' bucket."""
+        key = ("compact", cap_in, cap_out, depth)
+        if key in self._compiled:
+            return self._compiled[key]
+        backend = self.backend
+        block = self._resolve_compact(cap_in, depth)
+
+        def batch(verts, keep):
+            v, m, _ = ops.compact_survivors_batch(
+                verts, keep, cap_out, backend=backend, block=block
+            )
+            return v, m
+
+        fn = self._dp_map(batch, check=False)
+        self._compiled[key] = fn
+        return fn
+
+    def _static_fn(self, cap: int, target: int, depth: int):
+        """Pass 1 (static): ONE fused bound -> compaction dispatch chain.
+
+        Emits ``(compacted verts, compacted mask, (B, 2) counts)`` with
+        the counts staying ON DEVICE -- the chain has no data-dependent
+        decision, which is what makes static pass 1 sync-free.  The
+        compaction target is the plan's aligned static bucket, so no
+        survivor of a counted-schedule "compact" case can overflow it
+        (``core/plan.static_bucket``).
+        """
+        key = ("static_chain", cap, target, depth)
+        if key in self._compiled:
+            return self._compiled[key]
+        backend, k_dirs = self.backend, self.k_dirs
+        block = self._resolve_compact(cap, depth)
+
+        def batch(verts, masks):
+            keep, _ = prune_kernels.keep_mask_batch(verts, masks, k_dirs)
+            m_valid = jnp.sum(masks.astype(jnp.int32), axis=1)
+            m_kept = jnp.sum(keep.astype(jnp.int32), axis=1)
+            v, m, _ = ops.compact_survivors_batch(
+                verts, keep, target, backend=backend, block=block
+            )
+            return v, m, jnp.stack([m_valid, m_kept], axis=1)
+
+        fn = self._dp_map(batch, check=False)
+        self._compiled[key] = fn
+        return fn
+
+    def _batch_fn(self, bucket: planlib.Bucket, depth: int):
+        """Legacy one-pass fused per-case function (``prune=False``)."""
+        key = ("one_pass", bucket, depth)
+        if key in self._compiled:
+            return self._compiled[key]
+        backend, cap = self.backend, bucket.vertex_cap
+        variant, block = self._resolve_diameter(cap, depth)
+        mc_block, mc_chunk = self._resolve_mc(bucket.shape, depth)
+
+        def one(args):
+            mask, spacing = args
+            return _features_one(mask, spacing, cap, backend, variant, block,
+                                 mc_block, mc_chunk)
+
+        def batch(masks, spacings):
+            return jax.lax.map(one, (masks, spacings))
+
+        fn = self._dp_map(batch, check=False)
+        self._compiled[key] = fn
+        return fn
+
+    def _mc_fn(self, shape, depth: int):
+        """Pass 2a: staged batched fused MC for one shape bucket.
+
+        Consumes device-pool stacks directly (``ops.mc_volume_area_batch``)
+        and shards over the data axis exactly like pass 1.
+        """
+        key = ("mc", shape, depth)
+        if key in self._compiled:
+            return self._compiled[key]
+        backend = self.backend
+        mc_block, mc_chunk = self._resolve_mc(shape, depth)
+
+        def batch(masks, spacings):
+            return ops.mc_volume_area_batch(
+                masks, 0.5, spacings, backend=backend,
+                block=mc_block, chunk=mc_chunk,
+            )
+
+        fn = self._dp_map(batch, check=False)
+        self._compiled[key] = fn
+        return fn
+
+    def _diam_fn(self, cap, depth: int):
+        """Pass 2b: batched diameter sweep for one (pruned) vertex bucket."""
+        key = ("diam", cap, depth)
+        if key in self._compiled:
+            return self._compiled[key]
+        backend = self.backend
+        variant, block = self._resolve_diameter(cap, depth)
+
+        def one(args):
+            verts, vmask = args
+            return ops.max_diameters(
+                verts, vmask, backend=backend, variant=variant, block=block
+            )
+
+        def batch(verts, vmasks):
+            return jax.lax.map(one, (verts, vmasks))
+
+        fn = self._dp_map(batch, check=False)
+        self._compiled[key] = fn
+        return fn
+
+    # -- submit/drain drivers ----------------------------------------------
+
+    def _submit(self, entries, fn_for_key, make_chunk, batch_size=None):
+        """Submit every chunk of every entry; returns ``[(idxs, future)]``.
+
+        ``entries`` yields ``(compile key, case indices, payload)``;
+        ``make_chunk(payload, start, chunk, bs)`` materialises the stacked
+        input arrays for one chunk, padded up to ``bs`` rows (a multiple
+        of the mesh's data-axis size, so shard_map shapes stay uniform).
+        jax dispatch is async, so every launch of the window is queued
+        before any result is fetched -- the transfer/compute of chunk k+1
+        overlaps chunk k, and draining is the collector's job.
+        """
+        n_data = psharding.axis_size(self.mesh, self.data_axis)
+        futs = []
+        for gkey, idxs, payload in entries:
+            bs = batch_size or max(n_data, len(idxs))
+            bs = int(math.ceil(bs / n_data)) * n_data
+            fn = fn_for_key(gkey, autotune.batch_bucket(bs))
+            for s in range(0, len(idxs), bs):
+                chunk = idxs[s : s + bs]
+                futs.append((chunk, fn(*make_chunk(payload, s, chunk, bs))))
+        return futs
+
+    def _drain(self, futs, stage: str) -> dict:
+        """Fetch submitted futures into ``{case index: np row}``."""
+        out: dict[int, np.ndarray] = {}
+        for idxs, fut in futs:
+            o = self._fetch(stage, fut)
+            for j, i in enumerate(idxs):
+                out[i] = o[j]
+        return out
+
+    @staticmethod
+    def _stacked_chunk(arrays, s, chunk, bs):
+        """Chunk maker over PRE-STACKED device groups (pools / pass-1 out).
+
+        Slices straight off the device stacks -- no host re-stacking;
+        short trailing chunks pad with copies of their first row (mesh
+        padding rows in the stacks themselves are simply never read).
+        """
+        sl = tuple(a[s : s + len(chunk)] for a in arrays)
+        if len(chunk) < bs:
+            sl = tuple(
+                jnp.concatenate([a, jnp.repeat(a[:1], bs - len(chunk), axis=0)])
+                for a in sl
+            )
+        return sl
+
+    def _host_chunk(self, arrays_for_case):
+        """Chunk maker over host per-case arrays (the legacy pass-2b feed)."""
+
+        def make(_, s, chunk, bs):
+            filled = chunk + [chunk[0]] * (bs - len(chunk))
+            cols = zip(*(arrays_for_case(i) for i in filled))
+            return tuple(jnp.asarray(np.stack(c)) for c in cols)
+
+        return make
+
+    def _pool(self, prepped, idxs):
+        """Bucket-keyed device pool for one shape group: (masks, spacings).
+
+        ``jnp.stack`` of the staged per-case device masks runs on device;
+        the (B, 3) spacing sidecar is tiny host metadata.
+        """
+        return (
+            jnp.stack([prepped[i].mask for i in idxs]),
+            jnp.asarray(np.stack([prepped[i].spacing for i in idxs])),
+        )
+
+    # -- pass 0: prep + device staging --------------------------------------
+
+    def _prep_case(self, image, mask, spacing, fields: bool = True) -> _Prepped:
+        """Crop, bucket-pad, device-stage, and compact one case (pass 0).
+
+        ``fields=False`` (the legacy one-pass path, which recomputes the
+        vertex field inside its fused kernel) skips the field/count
+        launches and sizes the cap from the metadata hint
+        (``plan.vertex_hint`` -- memoised, spacing-aware).
+        """
+        sp = np.asarray(spacing, np.float32)
+        if not np.any(mask):
+            return _Prepped(spacing=sp)  # empty mask: all-zero feature row
+        _, m, _ = crop_to_roi(image, mask)
+        roi_shape = m.shape
+        bshape = planlib.shape_bucket(tuple(s - 2 for s in roi_shape))
+        pad = [(0, bs - ms) for bs, ms in zip(bshape, roi_shape)]
+        mdev = jnp.asarray(np.pad(m, pad))  # staged once; pool entry
+        if not fields:
+            hint = planlib.vertex_hint(tuple(s - 2 for s in roi_shape), sp)
+            return _Prepped(
+                mask=mdev, spacing=sp, shape=bshape, roi_shape=roi_shape,
+                n_vertices=hint,  # pad-waste census only (the fused kernel
+                vertex_cap=ops.vertex_bucket(hint),  # recounts for the row)
+            )
+        f, n = _fields_count(mdev, jnp.asarray(sp))
+        n = int(self._fetch("prep", n))
+        cap = ops.vertex_bucket(n)
+        verts, vmask = _compact_cap(f, cap)
+        if not self.device_compact:  # PR 2 host path: pull to numpy per case
+            verts = self._fetch("prep", verts)
+            vmask = self._fetch("prep", vmask)
+        return _Prepped(
+            mask=mdev, spacing=sp, shape=bshape, roi_shape=roi_shape,
+            verts=verts, vmask=vmask, n_vertices=n, vertex_cap=cap,
+        )
+
+    def _meta(self, p: _Prepped) -> planlib.CaseMeta:
+        if p.mask is None:
+            return planlib.CaseMeta(None, None, 0, 0)
+        return planlib.CaseMeta(p.shape, p.roi_shape, p.vertex_cap, p.n_vertices)
+
+    # -- pass 1 --------------------------------------------------------------
+
+    def _prune_pass(self, plan, prepped):
+        """Pass 1 (host path): vmapped bound + per-case host compaction."""
+        for _, idxs in plan.cap_groups.items():
+            batch = ops.prune_candidates_batch(
+                np.stack([prepped[i].verts for i in idxs]),
+                np.stack([prepped[i].vmask for i in idxs]),
+                k_dirs=self.k_dirs,
+            )
+            for i, (v2, m2, info) in zip(idxs, batch):
+                prepped[i].verts, prepped[i].vmask = v2, m2
+                prepped[i].vertex_cap = len(v2)
+                prepped[i].prune_info = info
+
+    def _pass1_counted(self, plan, prepped):
+        """Pass 1 (counted device path): sharded bound + device compaction.
+
+        Per cap group, ONE (sharded) vmapped bound launch computes every
+        keep mask, one small (B, 2) count fetch sizes the ragged M'
+        buckets, and one (sharded) compaction launch per target bucket
+        scatters the survivors -- the vertex data itself never leaves the
+        device.  Decisions (pruned or keep-originals) come from
+        ``prune.plan_compaction``, the same rule the host path composes,
+        so the two paths stay bit-identical.  Returns the pass-2b feed:
+        ``[(M' bucket, case indices, (verts, vmask) stacks)]``.
+        """
+        entries = []
+        for cap, idxs in plan.cap_groups.items():
+            b = len(idxs)
+            depth = autotune.batch_bucket(b)
+            verts, masks = self._pad_batch(
+                (
+                    jnp.stack([prepped[i].verts for i in idxs]),
+                    jnp.stack([prepped[i].vmask for i in idxs]),
+                ),
+                b,
+            )
+            keep, counts = self._bound_fn(cap, depth)(verts, masks)
+            # the one host sync of counted pass 1: a small (B, 2) matrix
+            counts = self._fetch("pass1", counts)
+            plans = [
+                prune_kernels.plan_compaction(
+                    cap, int(counts[j, 0]), int(counts[j, 1]),
+                    ops.vertex_bucket,
+                )
+                for j in range(b)
+            ]
+            for j, i in enumerate(idxs):
+                prepped[i].prune_info = plans[j][1]
+                prepped[i].vertex_cap = plans[j][0] or cap
+            # keep-originals cases feed pass 2 at their input cap
+            groups = planlib.group_indices(
+                [cap_out if cap_out else ("orig", cap) for cap_out, _ in plans]
+            )
+            for gkey, js in groups.items():
+                # whole cap group agreeing on one target reuses the stacks
+                take = (
+                    None if len(js) == b
+                    else jnp.asarray(np.asarray(js, np.int32))
+                )
+
+                def sub(*arrays):
+                    if take is None:
+                        return arrays
+                    return self._pad_batch(
+                        tuple(jnp.take(a, take, axis=0) for a in arrays),
+                        len(js),
+                    )
+
+                gidxs = [idxs[j] for j in js]
+                if isinstance(gkey, tuple):  # unpruned: originals, input cap
+                    entries.append((cap, gidxs, sub(verts, masks)))
+                    continue
+                # the launch carries the SUBGROUP's depth, not the cap group's
+                cv, cm = self._compact_fn(
+                    cap, gkey, autotune.batch_bucket(len(js))
+                )(*sub(verts, keep))
+                entries.append((gkey, gidxs, (cv, cm)))
+        return entries, []
+
+    def _pass1_static(self, plan, prepped):
+        """Pass 1 (static schedule): the sync-free dispatch chain.
+
+        Per cap group ONE fused bound+compaction chain targets the plan's
+        static bucket; the per-case counts stay on device and ride into
+        the collector as ``static_aux`` -- no host fetch happens anywhere
+        in this method (``transfer_log['pass1']`` stays 0, tier-1-locked).
+        Floor-cap groups (no shrink possible -- exactly the groups the
+        counted schedule always keeps at their original cap) skip the
+        chain entirely and feed pass 2b their original stacks.
+        """
+        entries, aux = [], []
+        for cap, idxs in plan.cap_groups.items():
+            b = len(idxs)
+            target = plan.static_targets[cap]
+            verts, masks = self._pad_batch(
+                (
+                    jnp.stack([prepped[i].verts for i in idxs]),
+                    jnp.stack([prepped[i].vmask for i in idxs]),
+                ),
+                b,
+            )
+            if target is None:
+                # counted parity without the bound: a floor-cap group can
+                # never re-bucket, so its PruneInfo is metadata-only
+                for i in idxs:
+                    n = prepped[i].n_vertices
+                    prepped[i].prune_info = prune_kernels.PruneInfo(
+                        cap, n, n, False
+                    )
+                    prepped[i].vertex_cap = cap
+                entries.append((cap, idxs, (verts, masks)))
+                continue
+            depth = autotune.batch_bucket(b)
+            cv, cm, counts = self._static_fn(cap, target, depth)(verts, masks)
+            entries.append((target, idxs, (cv, cm)))
+            aux.append((cap, idxs, counts, verts, masks))
+        return entries, aux
+
+    def _resolve_static_aux(self, window, d_out):
+        """Static collect: deferred count fetch + keep-originals re-sweep.
+
+        Fetches each cap group's (B, 2) counts (the sync the static
+        schedule moved out of pass 1), derives the SAME
+        ``plan_compaction`` decision the counted schedule makes, and for
+        the keep-originals cases re-sweeps the retained original stacks
+        at their input cap -- those rows' static-target results are the
+        only ones discarded.
+        """
+        prepped = window.prepped
+        retries = []
+        for cap, idxs, counts_fut, verts, masks in window.static_aux:
+            counts = self._fetch("pass2b_counts", counts_fut)
+            retry_js = []
+            for j, i in enumerate(idxs):
+                cap_out, info = prune_kernels.plan_compaction(
+                    cap, int(counts[j, 0]), int(counts[j, 1]),
+                    ops.vertex_bucket,
+                )
+                prepped[i].prune_info = info
+                prepped[i].vertex_cap = cap_out or cap
+                if cap_out is None:
+                    retry_js.append(j)
+            if retry_js:
+                take = jnp.asarray(np.asarray(retry_js, np.int32))
+                sub = self._pad_batch(
+                    tuple(jnp.take(a, take, axis=0) for a in (verts, masks)),
+                    len(retry_js),
+                )
+                retries.append((cap, [idxs[j] for j in retry_js], sub))
+        if retries:
+            futs = self._submit(retries, self._diam_fn, self._stacked_chunk)
+            d_out.update(self._drain(futs, "pass2b_retry"))
+
+    # -- window API ----------------------------------------------------------
+
+    def submit_window(self, cases, batch_size=None) -> _Window:
+        """Prep one window and issue EVERY device launch for it (no drains)."""
+        prepped = [self._prep_case(*c, fields=self.prune) for c in cases]
+        plan = planlib.build_plan([self._meta(p) for p in prepped], self.schedule)
+
+        mc_futs, diam_futs, fused_futs, aux = [], [], [], []
+        t_prune = 0.0
+        if not self.prune:
+            fused_entries = [
+                (bucket, idxs, self._pool(prepped, idxs))
+                for bucket, idxs in plan.fused_groups.items()
+            ]
+            fused_futs = self._submit(
+                fused_entries, self._batch_fn, self._stacked_chunk, batch_size
+            )
+            return _Window(prepped, plan, mc_futs, diam_futs, fused_futs,
+                           aux, t_prune)
+
+        # pass 1
+        t1 = time.perf_counter()
+        if self.device_compact:
+            if plan.schedule == "static":
+                entries, aux = self._pass1_static(plan, prepped)
+            else:
+                entries, aux = self._pass1_counted(plan, prepped)
+        else:
+            self._prune_pass(plan, prepped)
+            entries = None
+        t_prune = time.perf_counter() - t1
+
+        # pass 2a: staged fused MC per shape bucket, straight off the pools
+        mc_entries = [
+            (shape, idxs, self._pool(prepped, idxs))
+            for shape, idxs in plan.shape_groups.items()
+        ]
+        mc_futs = self._submit(
+            mc_entries, self._mc_fn, self._stacked_chunk, batch_size
+        )
+
+        # pass 2b: diameter sweep per pruned vertex bucket
+        if entries is not None:
+            diam_futs = self._submit(
+                entries, self._diam_fn, self._stacked_chunk, batch_size
+            )
+        else:
+            groups = planlib.group_indices(
+                [None if p.mask is None else len(p.verts) for p in prepped]
+            )
+            diam_futs = self._submit(
+                ((k, idxs, None) for k, idxs in groups.items()),
+                self._diam_fn,
+                self._host_chunk(lambda i: (prepped[i].verts, prepped[i].vmask)),
+                batch_size,
+            )
+        return _Window(prepped, plan, mc_futs, diam_futs, [], aux, t_prune)
+
+    def collect_window(self, window: _Window):
+        """Drain one submitted window; returns ``(rows, stats)`` in order."""
+        prepped = window.prepped
+        if window.fused_futs:  # legacy one-pass path
+            out = self._drain(window.fused_futs, "pass2")
+            rows = [
+                np.zeros(self.N_FEATURES, np.float32) if p.mask is None
+                else np.asarray(out[i], np.float32)
+                for i, p in enumerate(prepped)
+            ]
+            return rows, self._window_stats(window)
+
+        mc_out = self._drain(window.mc_futs, "pass2a")
+        d_out = self._drain(window.diam_futs, "pass2b")
+        if window.static_aux:
+            self._resolve_static_aux(window, d_out)
+
+        rows = []
+        for i, p in enumerate(prepped):
+            if p.mask is None:
+                rows.append(np.zeros(self.N_FEATURES, np.float32))
+                continue
+            rows.append(
+                np.concatenate(
+                    [np.asarray(mc_out[i], np.float32),
+                     np.asarray(d_out[i], np.float32),
+                     np.asarray([p.n_vertices], np.float32)]
+                )
+            )
+        return rows, self._window_stats(window)
+
+    def _window_stats(self, window: _Window) -> dict:
+        prepped = window.prepped
+        infos = [p.prune_info for p in prepped if p.prune_info is not None]
+        pruned = [inf for inf in infos if inf.pruned]
+        return {
+            "buckets": len(window.plan.shape_groups),
+            "vertex_buckets": len(
+                {p.vertex_cap for p in prepped if p.vertex_cap}
+            ),
+            "pruned_cases": len(pruned),
+            "empty_cases": sum(1 for p in prepped if p.mask is None),
+            "mean_keep_fraction": (
+                float(np.mean([inf.keep_fraction for inf in infos]))
+                if infos else 1.0
+            ),
+            "prune_seconds": window.t_prune,
+            "plan": window.plan.stats(),
+        }
+
+    # -- public driving ------------------------------------------------------
+
+    def run(self, cases: Sequence, batch_size: int | None = None):
+        """Extract features for (image, mask, spacing) cases (one window).
+
+        Returns a list of (7,) rows in input order plus throughput stats.
+        """
+        t0 = time.perf_counter()
+        fetches0 = dict(self.transfer_log)
+        window = self.submit_window(list(cases), batch_size)
+        results, stats = self.collect_window(window)
+        dt = time.perf_counter() - t0
+        stats.update(
+            cases=window.plan.n_cases,
+            seconds=dt,
+            cases_per_second=window.plan.n_cases / dt if dt > 0 else float("inf"),
+            data_parallel=psharding.axis_size(self.mesh, self.data_axis),
+            two_pass=self.prune,
+            device_compact=self.prune and self.device_compact,
+            schedule=self.schedule,
+            host_fetches={
+                k: v - fetches0.get(k, 0)
+                for k, v in self.transfer_log.items()
+                if v - fetches0.get(k, 0)
+            },
+        )
+        return results, stats
+
+    def extract_stream(self, cases: Iterable, window: int = 32,
+                       batch_size: int | None = None, stats_callback=None):
+        """Streaming front-end: overlap window k+1's prep with window k.
+
+        Consumes an iterator of (image, mask, spacing) cases and yields
+        feature rows in input order.  Window k+1 is prepped and its
+        launches submitted while the device still executes window k (jax
+        dispatch is async); only then is window k drained and yielded.
+        ``stats_callback(window_index, plan_stats)`` fires at each
+        window's submit with its plan census (buckets, pad waste).
+        """
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        it = iter(cases)
+        pending = None
+        widx = 0
+        while True:
+            chunk = list(itertools.islice(it, window))
+            state = None
+            if chunk:
+                state = self.submit_window(chunk, batch_size)
+                if stats_callback is not None:
+                    stats_callback(widx, state.plan.stats())
+                widx += 1
+            if pending is not None:
+                rows, _ = self.collect_window(pending)
+                yield from rows
+            if state is None:
+                return
+            pending = state
+
+    def extract_one(self, image, mask, spacing):
+        """Single-case pruned path: the batched pipeline's parity oracle.
+
+        Runs the identical stages (same bucket padding, pruning, tuned
+        configs, kernels) without any batching; returns a (7,) row.  An
+        empty mask yields zeros, matching the batched contract.
+        """
+        p = self._prep_case(image, mask, spacing)
+        if p.mask is None:
+            return np.zeros(self.N_FEATURES, np.float32)
+        if self.prune:
+            p.verts, p.vmask, p.prune_info = ops.prune_candidates(
+                p.verts, p.vmask, k_dirs=self.k_dirs
+            )
+        mc_block, mc_chunk = self._resolve_mc(p.shape)
+        mc_kw = {} if mc_block is None else {"block": mc_block, "chunk": mc_chunk}
+        vol, area = ops.mc_volume_area(
+            p.mask, 0.5, p.spacing, backend=self.backend, **mc_kw
+        )
+        variant, block = self._resolve_diameter(len(p.verts))
+        d = ops.max_diameters(
+            p.verts, p.vmask, backend=self.backend, variant=variant, block=block
+        )
+        return np.concatenate(
+            [np.asarray([vol, area], np.float32), np.asarray(d, np.float32),
+             np.asarray([p.n_vertices], np.float32)]
+        )

@@ -1,679 +1,149 @@
-"""Batched, device-parallel radiomics feature pipeline (the HPC story).
+"""Batched, device-parallel radiomics feature pipeline: the public facade.
 
-The paper's motivating workload is extracting features from ~40 000 CT scans
-on a cluster (xLUNGS).  Single-case GPU offload (Table 2) is step one; this
-module is step two: **throughput across cases**.
+The paper's motivating workload is extracting features from ~40 000 CT
+scans on a cluster (xLUNGS).  Single-case GPU offload (Table 2) is step
+one; this layer is the throughput story -- and since PR 4 it is split in
+two, with this module as the thin public surface:
 
-Design (the two-pass pruned pipeline, ``prune=True``, the default):
+* ``core/plan``     -- the PLAN layer: shape buckets, cap groups, the
+  pass schedule and the static pass-2b targets, all pure functions of
+  per-case metadata (never touches a device array);
+* ``core/executor`` -- the EXECUTOR layer: runs a plan with a
+  device-resident data plane for both passes, plus the streaming
+  front-end.
 
-  * **pass 1 (one vmapped bound kernel + one compaction kernel per cap
-    group):** every case is cropped, padded to its shape bucket, and its
-    deduplicated vertex field compacted to the static vertex cap; cases
-    sharing a cap are then stacked and the *exact* pruning bound
-    (``kernels/prune``) runs as a single vmapped kernel over the stack,
-    shrinking each candidate set M -> M' (typically 10-30x) with
-    guaranteed-identical maxima.  With ``device_compact=True`` (the
-    default) the survivors are then compacted into their M' buckets ON
-    DEVICE by the batched segmented-compaction kernel
-    (``kernels/compact``): the only host traffic pass 1 produces is one
-    small (B,) count fetch per cap group (to size the ragged M' buckets),
-    and the bucketed ``(verts, vmask)`` stacks stay device-resident all
-    the way into pass 2b -- no per-case ``np.asarray``/``np.nonzero``
-    round trip between the passes.  ``device_compact=False`` keeps the
-    PR 2 host-side compaction (bit-identical features; the parity
-    baseline).  With a mesh, the bound + compaction launches shard over
-    the ``data`` axis (``parallel.sharding.data_parallel_map``), so pass 1
-    scales over devices exactly like pass 2;
-  * **pass 2 (re-bucketed batched kernels):** cases are re-grouped twice --
-    by padded volume shape for the fused marching-cubes kernel and by the
-    *pruned* vertex bucket M' for the O(M'^2) diameter kernel -- so each
-    sub-batch compiles once against the pruned candidate set.  This brings
-    the single-case pruning win to the batch: the pair sweep costs
-    (M'/M)^2 of the unpruned batched pipeline's dominant stage;
-  * both passes resolve the measured-best kernel configuration per bucket
-    from the autotune cache (``runtime/autotune``): the diameter
-    (variant, block) for the M' bucket and the marching-cubes
-    (brick, chunk) for the shape bucket, resolved OUTSIDE the traced
-    functions;
-  * inside a sub-batch, cases are stacked and mapped with ``jax.lax.map``
-    (sequential per device, the kernels already saturate a chip); with a
-    mesh, the batch axis is sharded over the ``data`` axis -- N chips
-    process N cases concurrently, the multi-pod extension the paper's
-    conclusion calls for;
-  * host->device feeding is double-buffered with ``jax.device_put`` so the
-    transfer of batch i+1 overlaps the compute of batch i (the paper notes
-    DMA/transfer overlap as the open opportunity);
-  * empty-mask cases yield an all-zero feature row instead of raising: a
-    40k-case sweep must not die on one degenerate segmentation (the
-    single-case ``ShapeFeatureExtractor`` keeps its strict ValueError).
+Data flow of one window (``PlanExecutor.submit_window`` /
+``collect_window``)::
 
-``prune=False`` selects the legacy one-pass pipeline (one fused per-case
-function per bucket, no pruning) -- kept as the benchmark baseline.
+      cases ──► pass 0: crop + bucket-pad + STAGE mask on device ──┐
+                (dedup vertex fields + count; cap = M bucket)      │
+                                                                   ▼
+                       ┌──────────────── bucket-keyed device pools ┐
+                       │  masks (per shape bucket)    verts/vmask  │
+                       └───────┬───────────────────────────┬───────┘
+                               │                           │
+              pass 2a ◄────────┘            pass 1 ────────┘
+          fused MC batch                sharded bound + segmented
+        (device stacks, no       compaction per cap group
+         host re-stacking)          │ 'counted': (B,2) count fetch
+                               │    │   sizes ragged M' buckets
+                               │    │ 'static': counts stay ON DEVICE,
+                               │    │   compact into cap//2 target
+                               │    ▼
+                               │  pass 2b: diameter sweep per M' bucket
+                               ▼    (device stacks from pass 1)
+                            collect: drain rows; static schedule resolves
+                            its deferred counts here and re-sweeps the
+                            rare keep-originals cases at their input cap
 
-Parity contract: ``extract_one`` runs the identical stages case-by-case
-(same padding, same pruning bound, same tuned configs, same kernels) and is
-the oracle the batched path is property-tested against -- batching may
-never change a feature value.
+Schedules (``schedule=``):
+
+* ``'counted'`` (default): the PR 3 behaviour -- tightest M' buckets,
+  one (B, 2) host sync per cap group between pass 1 and pass 2b;
+* ``'static'``: sync-free pass 1 -> 2b dispatch chain.  The plan picks
+  each cap group's target as the next power-of-two below the cap, which
+  is *exactly* the counted schedule's re-bucketing win boundary
+  (``plan.static_bucket``), so the two schedules are bit-identical
+  (tier-1-locked) -- static trades padded pair-sweep work (cap//2 vs
+  the tight bucket) for zero pass-1 syncs, the right trade for
+  streaming and for high-latency links (measured numbers in ROADMAP).
+
+Front-ends:
+
+* ``run(cases)`` / ``extract_batch(cases)`` -- one window, results +
+  stats;
+* ``extract_stream(cases, window=...)`` -- dataset-level streaming:
+  host prep of window k+1 overlaps device execution of window k, rows
+  yielded in input order (the cluster scenario of the paper's
+  conclusion; see ``examples/cluster_pipeline.py``);
+* ``extract_one`` -- the single-case parity oracle: identical stages,
+  no batching; batching may never change a feature value (tier-1).
+
+Legacy paths kept as parity baselines: ``prune=False`` (one-pass fused
+pipeline), ``device_compact=False`` (PR 2 host-side compaction).
+Empty-mask cases yield all-zero rows instead of raising: a 40k-case
+sweep must not die on one degenerate segmentation.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-import math
-import time
-from typing import Sequence
+from typing import Iterable, Sequence
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.core import dispatcher
-from repro.core.shape_features import crop_to_roi
-from repro.kernels import ops
-from repro.kernels import prune as prune_kernels
-from repro.parallel import sharding as psharding
-
-
-@dataclasses.dataclass(frozen=True)
-class Bucket:
-    """Static compilation key: padded shape + vertex cap."""
-
-    shape: tuple[int, int, int]
-    vertex_cap: int
-
-
-def _bucket_dim(n: int, step: int = 32) -> int:
-    return max(step, int(math.ceil(n / step)) * step)
-
-
-def assign_bucket(mask_shape, n_vertices_hint=None, step=32) -> Bucket:
-    shape = tuple(_bucket_dim(s + 2, step) for s in mask_shape)
-    if n_vertices_hint is None:
-        # conservative: active edges ~ surface cells; cap by total edges
-        n_vertices_hint = int(np.prod(mask_shape) ** (2 / 3) * 12)
-    return Bucket(shape, ops.vertex_bucket(n_vertices_hint))
-
-
-def group_indices(keys: Sequence) -> dict:
-    """Partition ``range(len(keys))`` by key, preserving input order.
-
-    The re-bucketing primitive of both passes: every index lands in exactly
-    one group (no drops, no duplicates -- property-tested).  ``None`` keys
-    (degenerate cases) are excluded from the grouping.
-    """
-    groups: dict = {}
-    for i, k in enumerate(keys):
-        if k is not None:
-            groups.setdefault(k, []).append(i)
-    return groups
-
-
-@dataclasses.dataclass
-class _Prepped:
-    """Pass-1 host-side state for one case (None mask = empty-mask case)."""
-
-    mask: np.ndarray | None = None  # bucket-padded mask
-    spacing: np.ndarray | None = None
-    shape: tuple | None = None  # padded shape bucket (MC group key)
-    verts: object | None = None  # (pruned) candidates; jax.Array when the
-    vmask: object | None = None  # device-compaction path keeps them resident
-    n_vertices: int = 0  # pre-prune dedup vertex count (a feature)
-    vertex_cap: int = 0  # static M' bucket the diameter kernel compiles for
-    prune_info: object | None = None
-
-
-@jax.jit
-def _fields_count(mask, spacing):
-    """Pass-1a compute: dedup vertex fields + active count, one compile per
-    shape bucket (the eager per-op path costs ~10x on a cold sweep)."""
-    fields = ops.vertex_fields(mask, 0.5, spacing)
-    return fields, ops.count_vertices(fields)
-
-
-@functools.partial(jax.jit, static_argnames=("cap",))
-def _compact_cap(fields, cap: int):
-    verts, vmask, _ = ops.compact_vertices(fields, cap)
-    return verts, vmask
-
-
-def _features_one(mask, spacing, vertex_cap, backend, variant, block=None,
-                  mc_block=None, mc_chunk=None):
-    mc_kw = {} if mc_block is None else {"block": mc_block, "chunk": mc_chunk}
-    vol, area = ops.mc_volume_area(mask, 0.5, spacing, backend=backend, **mc_kw)
-    fields = ops.vertex_fields(mask, 0.5, spacing)
-    verts, vmask, n = ops.compact_vertices(fields, vertex_cap)
-    d = ops.max_diameters(
-        verts, vmask, backend=backend, variant=variant, block=block
-    )
-    return jnp.concatenate(
-        [jnp.stack([vol, area]), d, jnp.asarray([n], jnp.float32)]
-    )  # (7,)
+# re-exported planning primitives (public API since PR 1-3)
+from repro.core.executor import PlanExecutor
+from repro.core.plan import (  # noqa: F401  (re-exports)
+    Bucket,
+    assign_bucket,
+    group_indices,
+)
 
 
 class BatchedExtractor:
     """Vectorised multi-case extraction, optionally sharded over a mesh.
 
-    ``prune=True`` (default) runs the two-pass pruned pipeline described in
-    the module docstring; ``prune=False`` the legacy one-pass path.
-    ``device_compact=True`` (default) keeps pass 1's survivor compaction on
-    device (``kernels/compact``); ``device_compact=False`` selects the PR 2
-    host-side compaction -- bit-identical features, kept as the parity
-    baseline.  ``variant='auto'`` / ``mc_block='auto'`` /
-    ``compact_block='auto'`` resolve the measured-best diameter
-    (variant, block), MC (brick, chunk), and compaction scatter block once
-    per bucket from the autotune cache -- each sub-batch then compiles
-    against the tuned configuration.  ``mesh`` defaults to the ambient
-    ``parallel.sharding.use_mesh`` context.
+    The public facade over ``plan.build_plan`` + ``executor.PlanExecutor``
+    (see the module docstring for the architecture).  ``prune=True``
+    (default) runs the two-pass pruned pipeline; ``prune=False`` the
+    legacy one-pass path.  ``device_compact=True`` (default) keeps pass
+    1's survivor compaction on device; ``device_compact=False`` selects
+    the PR 2 host-side compaction -- bit-identical features, kept as the
+    parity baseline.  ``schedule='static'`` removes the pass-1 count
+    sync (bit-identical to ``'counted'``, tier-1-locked).
+    ``variant='auto'`` / ``mc_block='auto'`` / ``compact_block='auto'``
+    resolve the measured-best kernel configurations per (bucket,
+    batch-depth) from the autotune cache.  ``mesh`` defaults to the
+    ambient ``parallel.sharding.use_mesh`` context.
     """
 
-    N_FEATURES = 7  # [vol, area, d3, dxy, dxz, dyz, n_vertices]
+    N_FEATURES = PlanExecutor.N_FEATURES
 
     def __init__(self, backend=None, variant="auto", mesh: Mesh | None = None,
                  data_axis: str = "data", prune: bool = True,
                  mc_block="auto", mc_chunk: int | None = None,
                  k_dirs: int = 16, device_compact: bool = True,
-                 compact_block="auto"):
-        self.backend = dispatcher.resolve_backend(backend)
-        self.variant = variant
-        if mesh is None:
-            # adopt the ambient use_mesh mesh only when it can actually
-            # shard the batch: train/serve meshes without a data axis must
-            # not turn a working CPU pipeline into a KeyError
-            ambient = psharding.active_mesh()
-            if ambient is not None and data_axis in ambient.shape:
-                mesh = ambient
-        self.mesh = mesh
-        self.data_axis = data_axis
-        self.prune = prune
-        self.mc_block = mc_block
-        self.mc_chunk = mc_chunk
-        self.k_dirs = k_dirs
-        self.device_compact = device_compact
-        self.compact_block = compact_block
-        self._compiled = {}
-
-    # -- compiled-function cache -------------------------------------------
-
-    def _shard_jit(self, batch_fn):
-        if self.mesh is None:
-            return jax.jit(batch_fn)
-        sh = NamedSharding(self.mesh, P(self.data_axis))
-        return jax.jit(batch_fn, in_shardings=(sh, sh), out_shardings=sh)
-
-    def _resolve_mc(self, shape):
-        """Tuned MC (brick, chunk) for a shape bucket, outside any trace."""
-        if self.backend == "ref":
-            return None, None
-        return dispatcher.mc_config(
-            self.backend, shape, self.mc_block, self.mc_chunk
+                 compact_block="auto", schedule: str = "counted",
+                 transfer_callback=None):
+        self.executor = PlanExecutor(
+            backend=backend, variant=variant, mesh=mesh, data_axis=data_axis,
+            prune=prune, mc_block=mc_block, mc_chunk=mc_chunk, k_dirs=k_dirs,
+            device_compact=device_compact, compact_block=compact_block,
+            schedule=schedule, transfer_callback=transfer_callback,
         )
+        ex = self.executor
+        self.backend = ex.backend
+        self.variant = ex.variant
+        self.mesh = ex.mesh
+        self.data_axis = ex.data_axis
+        self.prune = ex.prune
+        self.device_compact = ex.device_compact
+        self.schedule = ex.schedule
 
-    def _resolve_diameter(self, cap):
-        """Tuned diameter (variant, block) for a vertex cap, outside traces."""
-        if self.backend == "ref":
-            return self.variant, None
-        return dispatcher.diameter_config(self.backend, cap, self.variant)
-
-    def _bound_fn(self, cap: int):
-        """Pass 1b: sharded vmapped pruning bound + survivor counts.
-
-        Maps stacked ``(B, cap, 3)`` verts + ``(B, cap)`` masks to
-        ``(keep, m_valid, m_kept)``; with a mesh the batch shards over the
-        data axis (``data_parallel_map`` is a plain jit without one).
-        """
-        key = ("prune_bound", cap)
-        if key in self._compiled:
-            return self._compiled[key]
-        k_dirs = self.k_dirs
-
-        def batch(verts, masks):
-            keep, _ = prune_kernels.keep_mask_batch(verts, masks, k_dirs)
-            m_valid = jnp.sum(masks.astype(jnp.int32), axis=1)
-            m_kept = jnp.sum(keep.astype(jnp.int32), axis=1)
-            # counts ride out pre-stacked (B, 2) so the host fetch is one
-            # transfer with no eager stitching (batch dim first: shardable)
-            return keep, jnp.stack([m_valid, m_kept], axis=1)
-
-        fn = psharding.data_parallel_map(batch, self.mesh, self.data_axis)
-        self._compiled[key] = fn
-        return fn
-
-    def _compact_fn(self, cap_in: int, cap_out: int):
-        """Pass 1c: sharded batched segmented compaction into the M' bucket."""
-        key = ("compact", cap_in, cap_out)
-        if key in self._compiled:
-            return self._compiled[key]
-        backend = self.backend
-        # resolve the tuned scatter block OUTSIDE the traced function
-        block = (
-            None if backend == "ref"
-            else dispatcher.compact_config(backend, cap_in, self.compact_block)
-        )
-
-        def batch(verts, keep):
-            v, m, _ = ops.compact_survivors_batch(
-                verts, keep, cap_out, backend=backend, block=block
-            )
-            return v, m
-
-        fn = psharding.data_parallel_map(batch, self.mesh, self.data_axis)
-        self._compiled[key] = fn
-        return fn
-
-    def _pad_batch(self, arrays, n: int):
-        """Pad stacked leading dims to a data-axis multiple (first-row copies)."""
-        n_data = 1 if self.mesh is None else self.mesh.shape[self.data_axis]
-        np_ = int(math.ceil(max(n, 1) / n_data)) * n_data
-        if np_ == n:
-            return arrays
-        return tuple(
-            jnp.concatenate([a, jnp.repeat(a[:1], np_ - n, axis=0)])
-            for a in arrays
-        )
-
-    def _batch_fn(self, bucket: Bucket):
-        """Legacy one-pass fused per-case function (``prune=False``)."""
-        key = ("one_pass", bucket)
-        if key in self._compiled:
-            return self._compiled[key]
-        backend, cap = self.backend, bucket.vertex_cap
-        variant, block = self._resolve_diameter(cap)
-        mc_block, mc_chunk = self._resolve_mc(bucket.shape)
-
-        def one(args):
-            mask, spacing = args
-            return _features_one(mask, spacing, cap, backend, variant, block,
-                                 mc_block, mc_chunk)
-
-        def batch(masks, spacings):
-            return jax.lax.map(one, (masks, spacings))
-
-        fn = self._shard_jit(batch)
-        self._compiled[key] = fn
-        return fn
-
-    def _mc_fn(self, shape):
-        """Pass-2a: batched fused MC volume+area for one shape bucket."""
-        key = ("mc", shape)
-        if key in self._compiled:
-            return self._compiled[key]
-        backend = self.backend
-        mc_block, mc_chunk = self._resolve_mc(shape)
-        mc_kw = {} if mc_block is None else {"block": mc_block, "chunk": mc_chunk}
-
-        def one(args):
-            mask, spacing = args
-            vol, area = ops.mc_volume_area(
-                mask, 0.5, spacing, backend=backend, **mc_kw
-            )
-            return jnp.stack([vol, area])
-
-        def batch(masks, spacings):
-            return jax.lax.map(one, (masks, spacings))
-
-        fn = self._shard_jit(batch)
-        self._compiled[key] = fn
-        return fn
-
-    def _diam_fn(self, cap):
-        """Pass-2b: batched diameter sweep for one (pruned) vertex bucket."""
-        key = ("diam", cap)
-        if key in self._compiled:
-            return self._compiled[key]
-        backend = self.backend
-        variant, block = self._resolve_diameter(cap)
-
-        def one(args):
-            verts, vmask = args
-            return ops.max_diameters(
-                verts, vmask, backend=backend, variant=variant, block=block
-            )
-
-        def batch(verts, vmasks):
-            return jax.lax.map(one, (verts, vmasks))
-
-        fn = self._shard_jit(batch)
-        self._compiled[key] = fn
-        return fn
-
-    # -- batching driver ----------------------------------------------------
-
-    def _drive(self, entries, fn_for_key, make_chunk, batch_size=None):
-        """Shared double-buffered batch driver for both pass-2 feeds.
-
-        ``entries`` yields ``(compile key, case indices, payload)``;
-        ``make_chunk(payload, start, chunk, bs)`` materialises the stacked
-        input arrays for one chunk, padded up to ``bs`` rows.  Batch sizes
-        are rounded to a multiple of the mesh's data-axis size so
-        shard_map shapes stay uniform; the submit of batch k+1 overlaps
-        the compute of batch k.  Returns ``{case index: np row}`` -- each
-        input index exactly once.
-        """
-        n_data = 1
-        if self.mesh is not None:
-            n_data = self.mesh.shape[self.data_axis]
-        out: dict[int, np.ndarray] = {}
-
-        def drain(pending):
-            idx, fut = pending
-            o = np.asarray(fut)
-            for j, i in enumerate(idx):
-                out[i] = o[j]
-
-        for gkey, idxs, payload in entries:
-            fn = fn_for_key(gkey)
-            bs = batch_size or max(n_data, len(idxs))
-            bs = int(math.ceil(bs / n_data)) * n_data
-            pending = None
-            for s in range(0, len(idxs), bs):
-                chunk = idxs[s : s + bs]
-                fut = fn(*make_chunk(payload, s, chunk, bs))
-                if pending is not None:
-                    drain(pending)
-                pending = (chunk, fut)
-            if pending is not None:
-                drain(pending)
-        return out
-
-    def _run_grouped(self, groups, fn_for_key, arrays_for_case,
-                     batch_size=None):
-        """Grouped batch driver over host per-case arrays.
-
-        ``groups`` maps a compile key to case indices; ``arrays_for_case``
-        returns the per-case input arrays to stack.  Chunks are padded
-        with copies of their first element.
-        """
-
-        def make_chunk(_, s, chunk, bs):
-            filled = chunk + [chunk[0]] * (bs - len(chunk))
-            cols = zip(*(arrays_for_case(i) for i in filled))
-            return tuple(jnp.asarray(np.stack(c)) for c in cols)
-
-        return self._drive(
-            ((k, idxs, None) for k, idxs in groups.items()),
-            fn_for_key, make_chunk, batch_size,
-        )
-
-    def _run_stacked(self, entries, fn_for_key, batch_size=None):
-        """Driver over PRE-STACKED device groups (the device pass-2b feed).
-
-        ``entries`` is the pass-1 device output: ``(key, idxs, arrays)``
-        tuples whose ``arrays`` are stacked device arrays with leading dim
-        >= len(idxs) (mesh padding rows, if any, are simply never read).
-        Chunks are sliced straight off the device stacks -- no host
-        re-stacking between the passes.
-        """
-
-        def make_chunk(arrays, s, chunk, bs):
-            sl = tuple(a[s : s + len(chunk)] for a in arrays)
-            if len(chunk) < bs:
-                sl = tuple(
-                    jnp.concatenate(
-                        [a, jnp.repeat(a[:1], bs - len(chunk), axis=0)]
-                    )
-                    for a in sl
-                )
-            return sl
-
-        return self._drive(entries, fn_for_key, make_chunk, batch_size)
-
-    # -- pass 1 -------------------------------------------------------------
-
-    def _prep_case(self, image, mask, spacing) -> _Prepped:
-        """Crop, bucket-pad, and compact one case's vertex field (pass 1a)."""
-        sp = np.asarray(spacing, np.float32)
-        if not np.any(mask):
-            return _Prepped(spacing=sp)  # empty mask: all-zero feature row
-        _, m, _ = crop_to_roi(image, mask)
-        b = assign_bucket(tuple(s - 2 for s in m.shape))
-        pad = [(0, bs - ms) for bs, ms in zip(b.shape, m.shape)]
-        mp = np.pad(m, pad)
-        fields, n = _fields_count(jnp.asarray(mp), jnp.asarray(sp))
-        n = int(n)
-        cap = ops.vertex_bucket(n)
-        verts, vmask = _compact_cap(fields, cap)
-        if not self.device_compact:  # PR 2 host path: pull to numpy per case
-            verts, vmask = np.asarray(verts), np.asarray(vmask)
-        return _Prepped(
-            mask=mp, spacing=sp, shape=b.shape,
-            verts=verts, vmask=vmask, n_vertices=n, vertex_cap=cap,
-        )
-
-    def _prune_pass(self, prepped: list[_Prepped]):
-        """Pass 1b (host path): vmapped bound + per-case host compaction."""
-        cap_groups = group_indices(
-            [None if p.mask is None else len(p.verts) for p in prepped]
-        )
-        for _, idxs in cap_groups.items():
-            batch = ops.prune_candidates_batch(
-                np.stack([prepped[i].verts for i in idxs]),
-                np.stack([prepped[i].vmask for i in idxs]),
-                k_dirs=self.k_dirs,
-            )
-            for i, (v2, m2, info) in zip(idxs, batch):
-                prepped[i].verts, prepped[i].vmask = v2, m2
-                prepped[i].vertex_cap = len(v2)
-                prepped[i].prune_info = info
-
-    def _prune_pass_device(self, prepped: list[_Prepped]):
-        """Pass 1b+1c (device path): sharded bound + on-device compaction.
-
-        Per original-cap group, ONE (sharded) vmapped bound launch computes
-        every keep mask, one small (B,) count fetch sizes the ragged M'
-        buckets, and one (sharded) batched segmented-compaction launch per
-        target bucket scatters the survivors -- the vertex data itself
-        never leaves the device.  Decisions (pruned or keep-originals) come
-        from ``prune.plan_compaction``, the same rule the host path
-        composes, so the two paths stay bit-identical.
-
-        Returns the pass-2b feed: ``[(M' bucket, case indices, (verts,
-        vmask) stacks)]`` -- already-bucketed device stacks the diameter
-        sweep consumes directly (``_run_stacked``), which is what lets the
-        two passes pipeline with no host re-stacking in between.
-        """
-        entries = []
-        cap_groups = group_indices(
-            [None if p.mask is None else len(p.verts) for p in prepped]
-        )
-        for cap, idxs in cap_groups.items():
-            b = len(idxs)
-            verts, masks = self._pad_batch(
-                (
-                    jnp.stack([prepped[i].verts for i in idxs]),
-                    jnp.stack([prepped[i].vmask for i in idxs]),
-                ),
-                b,
-            )
-            keep, counts = self._bound_fn(cap)(verts, masks)
-            # the one host sync of pass 1: a small (B, 2) count matrix
-            counts = np.asarray(counts)
-            plans = [
-                prune_kernels.plan_compaction(
-                    cap, int(counts[j, 0]), int(counts[j, 1]),
-                    ops.vertex_bucket,
-                )
-                for j in range(b)
-            ]
-            for j, i in enumerate(idxs):
-                prepped[i].prune_info = plans[j][1]
-                prepped[i].vertex_cap = plans[j][0] or cap
-            # keep-originals cases feed pass 2 at their input cap
-            groups = group_indices(
-                [cap_out if cap_out else ("orig", cap) for cap_out, _ in plans]
-            )
-            for gkey, js in groups.items():
-                # whole cap group agreeing on one target reuses the stacks
-                take = (
-                    None if len(js) == b
-                    else jnp.asarray(np.asarray(js, np.int32))
-                )
-
-                def sub(*arrays):
-                    if take is None:
-                        return arrays
-                    return self._pad_batch(
-                        tuple(jnp.take(a, take, axis=0) for a in arrays),
-                        len(js),
-                    )
-
-                gidxs = [idxs[j] for j in js]
-                if isinstance(gkey, tuple):  # unpruned: originals, input cap
-                    entries.append((cap, gidxs, sub(verts, masks)))
-                    continue
-                cv, cm = self._compact_fn(cap, gkey)(*sub(verts, keep))
-                entries.append((gkey, gidxs, (cv, cm)))
-        return entries
-
-    # -- public API ---------------------------------------------------------
-
-    def extract_one(self, image, mask, spacing):
-        """Single-case pruned path: the batched pipeline's parity oracle.
-
-        Runs the identical stages (same bucket padding, pruning, tuned
-        configs, kernels) without any batching; returns a (7,) row.  An
-        empty mask yields zeros, matching the batched contract.
-        """
-        p = self._prep_case(image, mask, spacing)
-        if p.mask is None:
-            return np.zeros(self.N_FEATURES, np.float32)
-        if self.prune:
-            p.verts, p.vmask, p.prune_info = ops.prune_candidates(
-                p.verts, p.vmask, k_dirs=self.k_dirs
-            )
-        mc_block, mc_chunk = self._resolve_mc(p.shape)
-        mc_kw = {} if mc_block is None else {"block": mc_block, "chunk": mc_chunk}
-        vol, area = ops.mc_volume_area(
-            p.mask, 0.5, p.spacing, backend=self.backend, **mc_kw
-        )
-        variant, block = self._resolve_diameter(len(p.verts))
-        d = ops.max_diameters(
-            p.verts, p.vmask, backend=self.backend, variant=variant, block=block
-        )
-        return np.concatenate(
-            [np.asarray([vol, area], np.float32), np.asarray(d, np.float32),
-             np.asarray([p.n_vertices], np.float32)]
-        )
-
-    def run(self, cases: Sequence[tuple[np.ndarray, np.ndarray, np.ndarray]],
-            batch_size: int | None = None):
-        """Extract features for (image, mask, spacing) cases.
+    def run(self, cases: Sequence, batch_size: int | None = None):
+        """Extract features for (image, mask, spacing) cases (one window).
 
         Returns a list of (7,) arrays in input order plus throughput stats.
         """
-        t0 = time.perf_counter()
-        if self.prune:
-            results, stats = self._run_two_pass(cases, batch_size)
-        else:
-            results, stats = self._run_one_pass(cases, batch_size)
-        dt = time.perf_counter() - t0
-        n_data = 1
-        if self.mesh is not None:
-            n_data = self.mesh.shape[self.data_axis]
-        stats.update(
-            cases=len(cases),
-            seconds=dt,
-            cases_per_second=len(cases) / dt if dt > 0 else float("inf"),
-            data_parallel=n_data,
-            two_pass=self.prune,
-            device_compact=self.prune and self.device_compact,
+        return self.executor.run(cases, batch_size)
+
+    def extract_batch(self, cases: Sequence, batch_size: int | None = None):
+        """Alias of :meth:`run`: one window of the streaming machinery."""
+        return self.run(cases, batch_size)
+
+    def extract_stream(self, cases: Iterable, window: int = 32,
+                       batch_size: int | None = None, stats_callback=None):
+        """Stream (image, mask, spacing) cases; yield rows in input order.
+
+        Host prep (load + crop + pad + bucket) of window k+1 overlaps
+        device execution of window k; ``stats_callback(i, plan_stats)``
+        reports each window's plan census (buckets, pad waste) at submit
+        time.  ``run`` is one window of this machinery.
+        """
+        return self.executor.extract_stream(
+            cases, window=window, batch_size=batch_size,
+            stats_callback=stats_callback,
         )
-        return results, stats
 
-    def _run_two_pass(self, cases, batch_size):
-        # pass 1: prep + vmapped pruning bound + (device) compaction
-        prepped = [self._prep_case(*c) for c in cases]
-        t1 = time.perf_counter()
-        if self.device_compact:
-            entries = self._prune_pass_device(prepped)
-        else:
-            self._prune_pass(prepped)
-        t_prune = time.perf_counter() - t1
-
-        # pass 2a: fused MC per shape bucket
-        mc_out = self._run_grouped(
-            group_indices([p.shape for p in prepped]),
-            self._mc_fn,
-            lambda i: (prepped[i].mask, prepped[i].spacing),
-            batch_size,
-        )
-        # pass 2b: diameter sweep per pruned vertex bucket -- the device
-        # path consumes pass 1's already-bucketed stacks directly
-        if self.device_compact:
-            d_out = self._run_stacked(entries, self._diam_fn, batch_size)
-        else:
-            d_out = self._run_grouped(
-                group_indices(
-                    [None if p.mask is None else len(p.verts) for p in prepped]
-                ),
-                self._diam_fn,
-                lambda i: (prepped[i].verts, prepped[i].vmask),
-                batch_size,
-            )
-
-        results = []
-        for i, p in enumerate(prepped):
-            if p.mask is None:
-                results.append(np.zeros(self.N_FEATURES, np.float32))
-                continue
-            results.append(
-                np.concatenate(
-                    [np.asarray(mc_out[i], np.float32),
-                     np.asarray(d_out[i], np.float32),
-                     np.asarray([p.n_vertices], np.float32)]
-                )
-            )
-        infos = [p.prune_info for p in prepped if p.prune_info is not None]
-        pruned = [inf for inf in infos if inf.pruned]
-        stats = {
-            "buckets": len({p.shape for p in prepped if p.shape is not None}),
-            "vertex_buckets": len(
-                {p.vertex_cap for p in prepped if p.vertex_cap}
-            ),
-            "pruned_cases": len(pruned),
-            "empty_cases": sum(1 for p in prepped if p.mask is None),
-            "mean_keep_fraction": (
-                float(np.mean([inf.keep_fraction for inf in infos]))
-                if infos else 1.0
-            ),
-            "prune_seconds": t_prune,
-        }
-        return results, stats
-
-    def _run_one_pass(self, cases, batch_size):
-        prepped = []
-        buckets = []
-        for img, mask, spacing in cases:
-            sp = np.asarray(spacing, np.float32)
-            if not np.any(mask):
-                prepped.append((None, sp))
-                buckets.append(None)
-                continue
-            _, m, _ = crop_to_roi(img, mask)
-            b = assign_bucket(tuple(s - 2 for s in m.shape))
-            pad = [(0, bs - ms) for bs, ms in zip(b.shape, m.shape)]
-            prepped.append((np.pad(m, pad), sp))
-            buckets.append(b)
-
-        out = self._run_grouped(
-            group_indices(buckets),
-            self._batch_fn,
-            lambda i: prepped[i],
-            batch_size,
-        )
-        results = [
-            np.zeros(self.N_FEATURES, np.float32) if buckets[i] is None
-            else np.asarray(out[i], np.float32)
-            for i in range(len(cases))
-        ]
-        stats = {
-            "buckets": len({b for b in buckets if b is not None}),
-            "vertex_buckets": len(
-                {b.vertex_cap for b in buckets if b is not None}
-            ),
-            "pruned_cases": 0,
-            "empty_cases": sum(1 for b in buckets if b is None),
-            "mean_keep_fraction": 1.0,
-            "prune_seconds": 0.0,
-        }
-        return results, stats
+    def extract_one(self, image, mask, spacing):
+        """Single-case parity oracle (identical stages, no batching)."""
+        return self.executor.extract_one(image, mask, spacing)

@@ -1,0 +1,272 @@
+"""Plan layer: static extraction plans built from case metadata alone.
+
+The batched pipeline's planning decisions -- shape buckets, vertex-cap
+groups, the pass-2b compaction targets -- are pure functions of per-case
+*metadata* (ROI shape, spacing, vertex count).  This module isolates them
+from execution (``core/executor``): an :class:`ExtractionPlan` is a fully
+static description of one window's launches that never touches a device
+array, which is what lets the executor dispatch a whole window without
+data-dependent control flow.
+
+Two pass-2b bucket schedules:
+
+``schedule='counted'`` (default)
+    The exact PR 2/3 behaviour: pass 1 fetches the per-case survivor
+    counts ``(m_valid, m_kept)`` and re-buckets each case into
+    ``vertex_bucket(m_kept)`` -- the tightest pad, at the cost of ONE
+    host sync per cap group sitting between pass 1 and pass 2b.
+
+``schedule='static'``
+    The plan picks every cap group's pass-2b target up front:
+    :func:`static_bucket` -- the next power-of-two below the cap.  This
+    target is *exactly aligned* with the counted path's re-bucketing
+    rule: for a power-of-two cap, ``vertex_bucket(m_kept) < cap`` iff
+    ``m_kept <= cap // 2``, so every case the counted schedule would
+    compact fits the static target with no survivor dropped, and every
+    case that would overflow it is precisely a case the counted schedule
+    keeps at its original cap anyway.  Pass 1 therefore needs NO
+    survivor-count fetch: the executor compacts into the static target
+    unconditionally, ships the counts along as a device array, and
+    resolves the (rare) keep-originals cases at collect time.  The cost
+    is padding: survivors sweep at ``cap // 2`` instead of the tight
+    ``vertex_bucket(m_kept)`` bucket.
+
+The module also owns the metadata-only vertex-count hint
+(:func:`vertex_hint`): spacing-aware (anisotropic volumes cut more voxel
+planes per unit of physical surface), memoised (the hint for a repeated
+ROI shape is computed once per process, not per case), and capped at the
+volume's total edge count so a degenerate estimate can never allocate a
+cap group past what the mesh could physically produce.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Sequence
+
+MIN_VERTEX_BUCKET = 512  # the vertex_bucket ladder floor
+
+
+def vertex_bucket(n: int, minimum: int = MIN_VERTEX_BUCKET) -> int:
+    """Static padding cap for a vertex count (limits recompilation).
+
+    The single source of the M-bucket ladder; ``kernels.ops`` re-exports
+    it for the kernel-side callers (the plan layer must stay importable
+    without touching the kernel modules).
+    """
+    b = minimum
+    while b < n:
+        b *= 2
+    return b
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """Static compilation key: padded shape + vertex cap."""
+
+    shape: tuple[int, int, int]
+    vertex_cap: int
+
+
+def _bucket_dim(n: int, step: int = 32) -> int:
+    return max(step, int(math.ceil(n / step)) * step)
+
+
+def shape_bucket(mask_shape, step: int = 32) -> tuple[int, int, int]:
+    """Padded shape bucket for an ROI shape (one compile per bucket)."""
+    return tuple(_bucket_dim(s + 2, step) for s in mask_shape)
+
+
+@functools.lru_cache(maxsize=4096)
+def _vertex_hint(shape: tuple, spacing: tuple | None) -> int:
+    n = 1
+    edges = 3
+    for s in shape:
+        n *= int(s)
+        edges *= int(s) + 2
+    # ~12 active edges per surface cell; surface cells ~ N^(2/3) for a
+    # compact ROI filling a constant fraction of its bounding box
+    hint = float(n) ** (2.0 / 3.0) * 12.0
+    if spacing is not None:
+        # anisotropic spacing: a physical surface patch crosses more voxel
+        # planes along the finely-sampled axes.  Scale by the mean
+        # per-orientation cell-face density normalised to the isotropic
+        # equivalent (AM-GM: >= 1, == 1 for isotropic spacing).
+        sx, sy, sz = (float(s) for s in spacing)
+        iso2 = (sx * sy * sz) ** (2.0 / 3.0)
+        hint *= iso2 * (1.0 / (sy * sz) + 1.0 / (sx * sz) + 1.0 / (sx * sy)) / 3.0
+    # a mesh cannot have more vertices than the volume has grid edges
+    # (~3 per voxel of the +2-padded field): degenerate hints must not
+    # allocate a cap group past that ceiling
+    return int(min(hint, edges))
+
+
+def vertex_hint(mask_shape, spacing=None) -> int:
+    """Conservative, memoised active-edge estimate for an ROI shape.
+
+    Used when a plan must be built before the real vertex count exists
+    (metadata-only planning); the executor's prep pass replaces it with
+    the measured count.  Spacing-aware and capped at the volume's total
+    edge count -- see the module docstring.
+    """
+    sp = None if spacing is None else tuple(round(float(s), 6) for s in spacing)
+    return _vertex_hint(tuple(int(s) for s in mask_shape), sp)
+
+
+def assign_bucket(mask_shape, n_vertices_hint=None, step: int = 32,
+                  spacing=None) -> Bucket:
+    """(shape bucket, vertex cap) for an ROI shape; hint defaults to
+    :func:`vertex_hint` (memoised, spacing-aware)."""
+    if n_vertices_hint is None:
+        n_vertices_hint = vertex_hint(mask_shape, spacing)
+    return Bucket(shape_bucket(mask_shape, step), vertex_bucket(n_vertices_hint))
+
+
+def static_bucket(cap: int, minimum: int = MIN_VERTEX_BUCKET) -> int | None:
+    """Static pass-2b target for a cap group: next power-of-two below it.
+
+    Returns ``None`` when no shrink is possible (the cap is already at
+    the bucket floor).  For power-of-two caps this target is exactly the
+    counted schedule's win boundary: ``vertex_bucket(m) < cap`` iff
+    ``m <= cap // 2`` -- see the module docstring.
+    """
+    t = cap // 2
+    return t if t >= minimum else None
+
+
+def group_indices(keys: Sequence) -> dict:
+    """Partition ``range(len(keys))`` by key, preserving input order.
+
+    The re-bucketing primitive of both passes: every index lands in exactly
+    one group (no drops, no duplicates -- property-tested).  ``None`` keys
+    (degenerate cases) are excluded from the grouping.
+    """
+    groups: dict = {}
+    for i, k in enumerate(keys):
+        if k is not None:
+            groups.setdefault(k, []).append(i)
+    return groups
+
+
+@dataclasses.dataclass(frozen=True)
+class CaseMeta:
+    """Per-case planning metadata (no device data).
+
+    ``shape`` is the padded shape bucket (``None`` marks an empty-mask
+    case -- it takes part in no pass and yields a zero feature row);
+    ``roi_shape`` the cropped-ROI shape before bucket padding (pad-waste
+    accounting); ``vertex_cap`` the pass-1 compaction cap;
+    ``n_vertices`` the dedup vertex count (measured, or a
+    :func:`vertex_hint` for metadata-only plans).
+    """
+
+    shape: tuple | None
+    roi_shape: tuple | None
+    vertex_cap: int
+    n_vertices: int
+
+    @property
+    def empty(self) -> bool:
+        return self.shape is None
+
+
+@dataclasses.dataclass(frozen=True)
+class ExtractionPlan:
+    """Fully static execution plan for one window of cases.
+
+    ``shape_groups`` keys pass 2a (one fused-MC sub-batch per padded
+    shape), ``cap_groups`` keys pass 1 (one bound+compaction chain per
+    vertex cap), ``static_targets`` maps each cap group to its pass-2b
+    bucket under the static schedule (``None`` target = feed originals;
+    empty dict under the counted schedule, where targets come from the
+    fetched survivor counts at run time).
+    """
+
+    schedule: str
+    metas: tuple
+    shape_groups: dict
+    cap_groups: dict
+    static_targets: dict
+
+    @property
+    def n_cases(self) -> int:
+        return len(self.metas)
+
+    @property
+    def fused_groups(self) -> dict:
+        """(shape, cap) ``Bucket`` grouping for the legacy one-pass path."""
+        return group_indices(
+            [None if m.empty else Bucket(m.shape, m.vertex_cap)
+             for m in self.metas]
+        )
+
+    def stats(self) -> dict:
+        """Plan-level stats: bucket counts + pad-waste fractions.
+
+        ``mask_pad_waste`` is the fraction of padded pass-2a voxels that
+        are bucket padding; ``vertex_pad_waste`` the same for pass-1
+        vertex slots -- the quantities the static-vs-counted trade-off
+        moves (see ROADMAP).
+        """
+        roi_vox = pad_vox = 0
+        n_verts = cap_slots = 0
+        for m in self.metas:
+            if m.empty:
+                continue
+            roi_vox += math.prod(m.roi_shape)
+            pad_vox += math.prod(m.shape)
+            n_verts += m.n_vertices
+            cap_slots += m.vertex_cap
+        return {
+            "schedule": self.schedule,
+            "cases": self.n_cases,
+            "empty_cases": sum(1 for m in self.metas if m.empty),
+            "shape_buckets": len(self.shape_groups),
+            "cap_buckets": len(self.cap_groups),
+            "mask_pad_waste": 1.0 - roi_vox / pad_vox if pad_vox else 0.0,
+            "vertex_pad_waste": 1.0 - n_verts / cap_slots if cap_slots else 0.0,
+        }
+
+
+SCHEDULES = ("counted", "static")
+
+
+def build_plan(metas: Sequence[CaseMeta], schedule: str = "counted") -> ExtractionPlan:
+    """Build the static plan for one window from case metadata alone."""
+    if schedule not in SCHEDULES:
+        raise ValueError(f"schedule must be one of {SCHEDULES}, got {schedule!r}")
+    metas = tuple(metas)
+    cap_groups = group_indices([None if m.empty else m.vertex_cap for m in metas])
+    return ExtractionPlan(
+        schedule=schedule,
+        metas=metas,
+        shape_groups=group_indices([m.shape for m in metas]),
+        cap_groups=cap_groups,
+        static_targets=(
+            {cap: static_bucket(cap) for cap in cap_groups}
+            if schedule == "static" else {}
+        ),
+    )
+
+
+def plan_from_metadata(case_shapes, spacings=None, schedule: str = "counted") -> ExtractionPlan:
+    """Metadata-only plan: caps come from :func:`vertex_hint`, not counts.
+
+    For sizing/forecasting (pad waste, bucket census) before any mask is
+    materialised -- the executor always re-plans from measured counts.
+    """
+    metas = []
+    for i, shp in enumerate(case_shapes):
+        sp = None if spacings is None else spacings[i]
+        shp = tuple(int(s) for s in shp)
+        hint = vertex_hint(shp, sp)
+        metas.append(
+            CaseMeta(
+                shape=shape_bucket(shp),
+                roi_shape=tuple(s + 2 for s in shp),
+                vertex_cap=vertex_bucket(hint),
+                n_vertices=hint,
+            )
+        )
+    return build_plan(metas, schedule)

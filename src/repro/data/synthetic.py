@@ -79,6 +79,29 @@ def make_case(shape, seed=0, spacing=(1.0, 1.0, 1.0), n_blobs=None):
     return image, mask, np.asarray(spacing, np.float32)
 
 
+def stream_cases(n, dims_pool=None, seed=0, spacing=(1.0, 1.0, 1.0),
+                 skip=()):
+    """Lazy case stream for the dataset-level pipeline front-end.
+
+    Yields ``(name, image, mask, spacing)`` one case at a time -- the
+    shape `BatchedExtractor.extract_stream` consumes (after dropping the
+    name), without materialising the whole dataset: the streaming
+    pipeline preps window k+1 while the device executes window k, so the
+    producer must be an iterator, not a list.  ``dims_pool`` defaults to
+    the small-to-medium Table-2 dimensions; ``skip`` names cases to
+    exclude (the cluster example's restart path).
+    """
+    if dims_pool is None:
+        dims_pool = [d for _, d in TABLE2_CASES if min(d) >= 10][:8]
+    for i in range(n):
+        name = f"case-{i:05d}"
+        if name in skip:
+            continue
+        img, msk, sp = make_case(dims_pool[i % len(dims_pool)],
+                                 seed=seed + i, spacing=spacing)
+        yield name, img, msk, sp
+
+
 def table2_suite(seed=0, spacing=(1.0, 1.0, 1.0)):
     """The full 20-case synthetic suite with Table-2 dimensions."""
     out = []

@@ -239,6 +239,41 @@ def mc_volume_area_pallas(
     return jnp.abs(jnp.sum(vol_p)), jnp.sum(area_p)
 
 
+@functools.partial(
+    jax.jit, static_argnames=("block", "chunk", "interpret")
+)
+def mc_volume_area_batch_pallas(
+    vols,
+    iso=0.5,
+    spacings=None,
+    *,
+    block=(8, 8, 8),
+    chunk=512,
+    interpret=False,
+):
+    """Device-stack MC: ``(B, nx, ny, nz)`` masks -> ``(B, 2)`` [vol, area].
+
+    The batched entry point of the device-resident pass-2a data plane:
+    the executor stages bucket-padded masks into a device pool and feeds
+    stacked slices straight here -- no host re-stacking per chunk.  Cases
+    are mapped sequentially per device (``lax.map``; the brick grid of a
+    single case already saturates a chip) with per-case physical spacing
+    ``spacings``: ``(B, 3)``.
+    """
+    vols = jnp.asarray(vols, jnp.float32)
+    if spacings is None:
+        spacings = jnp.ones((vols.shape[0], 3), jnp.float32)
+
+    def one(args):
+        vol, sp = args
+        v, a = mc_volume_area_pallas(
+            vol, iso, sp, block=block, chunk=chunk, interpret=interpret
+        )
+        return jnp.stack([v, a])
+
+    return jax.lax.map(one, (vols, jnp.asarray(spacings, jnp.float32)))
+
+
 def flop_estimate(shape, block=(8, 8, 8), chunk=512) -> float:
     """Structural FLOP count: dominated by the one-hot MXU matmul."""
     nx, ny, nz = shape

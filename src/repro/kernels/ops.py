@@ -43,6 +43,46 @@ def mc_volume_area(vol, iso=0.5, spacing=(1.0, 1.0, 1.0), *, backend=None, **kw)
     )
 
 
+def mc_volume_area_batch(vols, iso=0.5, spacings=None, *, backend=None,
+                         block=None, chunk=None):
+    """Batched :func:`mc_volume_area` over a device stack (pass 2a).
+
+    ``vols``: (B, nx, ny, nz) bucket-padded masks, ``spacings``: (B, 3)
+    -> (B, 2) [volume, area] rows.  The device-resident MC feed: callers
+    (the executor's staged pass 2a) slice stacks straight off a
+    bucket-keyed device pool, so no host re-stacking happens per chunk.
+    This entry point is designed to be TRACED (it sits under the
+    executor's sharded jit), so ``block``/``chunk`` must already be
+    concrete for kernel backends -- resolve them outside the trace via
+    ``dispatcher.mc_config``; the 'ref' backend has no configuration axis.
+    """
+    b = dispatcher.resolve_backend(backend)
+    vols = jnp.asarray(vols, jnp.float32)
+    if spacings is None:
+        spacings = jnp.ones((vols.shape[0], 3), jnp.float32)
+    spacings = jnp.asarray(spacings, jnp.float32)
+    if b == "ref":
+        def one(args):
+            vol, sp = args
+            v, a = _ref.mc_volume_area(vol, iso, sp)
+            return jnp.stack([v, a])
+
+        return jax.lax.map(one, (vols, spacings))
+    if block is None or block == "auto" or chunk is None:
+        raise ValueError(
+            "mc_volume_area_batch is traced: resolve (block, chunk) outside "
+            "the trace via dispatcher.mc_config"
+        )
+    return _mc.mc_volume_area_batch_pallas(
+        vols,
+        iso,
+        spacings,
+        block=tuple(block),
+        chunk=chunk,
+        **dispatcher.kernel_kwargs(b),
+    )
+
+
 def max_diameters(verts, mask, *, backend=None, **kw):
     """(4,) [3D, Slice(xy), Row(xz), Column(yz)] max diameters.
 
@@ -162,9 +202,6 @@ def compact_vertices(fields, max_vertices):
     return _ref.compact_vertices(fields, max_vertices)
 
 
-def vertex_bucket(n: int, minimum: int = 512) -> int:
-    """Static padding cap for a vertex count (limits recompilation)."""
-    b = minimum
-    while b < n:
-        b *= 2
-    return b
+# Single-source M-bucket ladder: defined in the (kernel-free) plan layer,
+# re-exported here for the kernel-side callers that predate the split.
+from repro.core.plan import vertex_bucket  # noqa: E402, F401

@@ -20,9 +20,11 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import math
 import threading
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 
@@ -87,13 +89,15 @@ def data_parallel_map(fn, mesh: Mesh | None = None, axis: str = "data",
 
     ``fn`` maps arrays with a leading batch dimension to arrays with the
     same leading dimension (e.g. the pipeline's vmapped pass-1 pruning
-    bound or the batched segmented compaction).  With a mesh the batch
-    axis is split over ``axis`` via :func:`shard_map_compat`, so N devices
-    process N slices concurrently; with no mesh (or a mesh without the
-    axis) this is a plain ``jax.jit`` -- a strict no-op fallback, which is
-    what lets the same pipeline code run on CPU and on a pod.  ``mesh``
-    defaults to the ambient :func:`use_mesh` context.  Callers pad the
-    batch to a multiple of the axis size (shard_map shapes are uniform).
+    bound, the batched segmented compaction, or the staged pass-2a
+    marching-cubes batch).  With a mesh the batch axis is split over
+    ``axis`` via :func:`shard_map_compat`, so N devices process N slices
+    concurrently; with no mesh (or a mesh without the axis) this is a
+    plain ``jax.jit`` -- a strict no-op fallback, which is what lets the
+    same pipeline code run on CPU and on a pod.  ``mesh`` defaults to the
+    ambient :func:`use_mesh` context.  Callers pad the batch to a
+    multiple of the axis size (:func:`pad_batch`; shard_map shapes are
+    uniform).
     """
     mesh = mesh if mesh is not None else active_mesh()
     if mesh is None or axis not in mesh.shape:
@@ -102,6 +106,32 @@ def data_parallel_map(fn, mesh: Mesh | None = None, axis: str = "data",
     return jax.jit(
         shard_map_compat(fn, mesh=mesh, in_specs=spec, out_specs=spec,
                          check=check)
+    )
+
+
+def axis_size(mesh: Mesh | None, axis: str = "data") -> int:
+    """Size of ``axis`` on ``mesh`` (1 without a mesh or the axis)."""
+    if mesh is None or axis not in mesh.shape:
+        return 1
+    return mesh.shape[axis]
+
+
+def pad_batch(arrays, n: int, mesh: Mesh | None = None, axis: str = "data"):
+    """Pad stacked leading dims to a data-axis multiple (first-row copies).
+
+    The companion of :func:`data_parallel_map`: shard_map shapes must be
+    uniform across shards, so a batch of ``n`` rows is padded up to the
+    next multiple of the axis size by repeating row 0 (duplicate rows can
+    never change a per-case result, and callers simply never read the
+    padding rows back).  A no-op without a mesh.
+    """
+    n_data = axis_size(mesh, axis)
+    np_ = int(math.ceil(max(n, 1) / n_data)) * n_data
+    if np_ == n:
+        return tuple(arrays)
+    return tuple(
+        jnp.concatenate([a, jnp.repeat(a[:1], np_ - n, axis=0)])
+        for a in arrays
     )
 
 

@@ -12,15 +12,23 @@ the resolved backend, caches the winner in a JSON file, and hands the cached
 choice to every later call -- the TPU analogue of a CUDA occupancy/launch-
 bound autotuner.
 
-Cache schema (versioned): one JSON object ``{"schema": 2, "entries": {...}}``
-with entries keyed ``"diameter/<backend>/M<bucket>"``,
-``"mc/<backend>/S<nx>x<ny>x<nz>"``, and ``"compact/<backend>/M<bucket>"``
-(the segmented-compaction scatter block); each record holds the winning
-configuration plus the full measured table (microseconds), so the sweep is
-also a persisted perf trajectory.  PR 1 wrote a *flat* ``{key: record}``
-object (schema v1); loads migrate it transparently and the next ``put``
-rewrites the file in v2 form.  Unknown future schemas and malformed files
-load as empty (worst case: re-measure) -- the cache never crashes a run.
+Cache schema (versioned): one JSON object ``{"schema": 3, "entries": {...}}``
+with entries keyed ``"diameter/<backend>/M<bucket>/B<depth>"``,
+``"mc/<backend>/S<nx>x<ny>x<nz>/B<depth>"``, and
+``"compact/<backend>/M<bucket>/B<depth>"`` (the segmented-compaction
+scatter block).  ``B<depth>`` is the power-of-two *batch-depth bucket*
+(:func:`batch_bucket`): under ``lax.map`` / the batched pipeline the best
+(variant, block) / (brick, chunk) can shift with how many cases a launch
+carries, so the winning configuration is cached per (bucket, depth) pair
+and the sweeps measure at the requested depth.  Each record holds the
+winning configuration plus the full measured table (microseconds), so the
+sweep is also a persisted perf trajectory.  PR 1 wrote a *flat*
+``{key: record}`` object (schema v1) and PR 2/3 a v2 envelope with
+depth-less keys; loads migrate both transparently (depth-less keys gain
+``/B1`` -- those sweeps measured single-case launches) and the next
+``put`` rewrites the file in v3 form.  Unknown future schemas and
+malformed files load as empty (worst case: re-measure) -- the cache never
+crashes a run.
 The path comes from ``REPRO_AUTOTUNE_CACHE`` (default
 ``~/.cache/repro_autotune.json``); writes are atomic (tmp + rename) so
 concurrent processes at worst re-measure.
@@ -44,7 +52,7 @@ import time
 import jax
 import numpy as np
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 DEFAULT_VARIANTS = ("seqacc", "tri_prefetch", "nomask", "gram")
 DEFAULT_BLOCKS = (128, 256, 512)
@@ -84,13 +92,28 @@ def cache_path() -> str:
     return os.path.join(os.path.expanduser("~"), ".cache", "repro_autotune.json")
 
 
+def _migrate_key(key: str) -> str:
+    """v1/v2 -> v3 key migration: depth-less keys gain the ``/B1`` segment.
+
+    PR 1-3 sweeps measured single-case launches, so their records are
+    exactly the depth-1 entries of the v3 key space; unknown key shapes
+    pass through untouched (an unrecognised entry is merely never read).
+    """
+    parts = key.split("/")
+    if len(parts) == 3 and parts[0] in ("diameter", "mc", "compact"):
+        return key + "/B1"
+    return key
+
+
 class AutotuneCache:
     """Tiny versioned JSON key->record store with atomic writes.
 
-    On disk: ``{"schema": 2, "entries": {key: record}}``.  Schema v1 (the
+    On disk: ``{"schema": 3, "entries": {key: record}}``.  Schema v1 (the
     PR 1 layout: a flat ``{key: record}`` object with no ``schema`` field)
-    is migrated on load; an unknown schema or a malformed file reads as
-    empty so stale caches degrade to a re-sweep, never a crash.
+    and schema v2 (the PR 2/3 envelope with depth-less keys) are migrated
+    on load (see :func:`_migrate_key`); an unknown schema or a malformed
+    file reads as empty so stale caches degrade to a re-sweep, never a
+    crash.
     """
 
     def __init__(self, path: str | None = None):
@@ -107,8 +130,20 @@ class AutotuneCache:
     def _entries(self) -> dict:
         raw = self._read_raw()
         if "schema" not in raw:
-            # v1 (PR 1): flat key -> record mapping
-            return {k: v for k, v in raw.items() if isinstance(v, dict)}
+            # v1 (PR 1): flat key -> record mapping, depth-less keys
+            return {
+                _migrate_key(k): v
+                for k, v in raw.items() if isinstance(v, dict)
+            }
+        if raw.get("schema") == 2:
+            # v2 (PR 2/3): right envelope, depth-less keys
+            ent = raw.get("entries")
+            if not isinstance(ent, dict):
+                return {}
+            return {
+                _migrate_key(k): v
+                for k, v in ent.items() if isinstance(v, dict)
+            }
         if raw.get("schema") != SCHEMA_VERSION:
             return {}  # future schema: don't guess, re-measure
         ent = raw.get("entries")
@@ -142,17 +177,25 @@ class AutotuneCache:
                 pass
 
 
-def sweep_key(bucket: int, backend: str) -> str:
-    return f"diameter/{backend}/M{int(bucket)}"
+def batch_bucket(depth: int) -> int:
+    """Power-of-two batch-depth bucket (limits the per-depth key space)."""
+    b = 1
+    while b < int(depth):
+        b *= 2
+    return b
 
 
-def mc_key(shape, backend: str) -> str:
+def sweep_key(bucket: int, backend: str, batch: int = 1) -> str:
+    return f"diameter/{backend}/M{int(bucket)}/B{batch_bucket(batch)}"
+
+
+def mc_key(shape, backend: str, batch: int = 1) -> str:
     nx, ny, nz = (int(s) for s in shape)
-    return f"mc/{backend}/S{nx}x{ny}x{nz}"
+    return f"mc/{backend}/S{nx}x{ny}x{nz}/B{batch_bucket(batch)}"
 
 
-def compact_key(bucket: int, backend: str) -> str:
-    return f"compact/{backend}/M{int(bucket)}"
+def compact_key(bucket: int, backend: str, batch: int = 1) -> str:
+    return f"compact/{backend}/M{int(bucket)}/B{batch_bucket(batch)}"
 
 
 def mc_shape_bucket(shape, step: int = 32) -> tuple[int, int, int]:
@@ -171,23 +214,48 @@ def measure_diameter_config(
     variant: str,
     block: int,
     *,
+    batch: int = 1,
     repeat: int = 2,
     warmup: int = 1,
     seed: int = 0,
 ) -> float:
-    """Best-of-``repeat`` wall-clock seconds for one configuration."""
+    """Best-of-``repeat`` wall-clock seconds for one configuration.
+
+    ``batch > 1`` measures the launch the pipeline actually issues at
+    that depth -- a ``lax.map`` over a (batch, bucket, 3) stack -- since
+    grid overhead amortises differently under a mapped sub-batch.
+    """
     from repro.core import dispatcher
     from repro.kernels import diameter as dk
 
     rng = np.random.default_rng(seed)
-    verts = np.asarray(rng.normal(size=(bucket, 3)) * 10.0, np.float32)
-    mask = np.ones((bucket,), np.float32)
     kw = dispatcher.kernel_kwargs(backend)
 
-    def call():
-        return dk.max_diameters_sq_pallas(
-            verts, mask, block=block, variant=variant, **kw
+    if batch <= 1:
+        verts = np.asarray(rng.normal(size=(bucket, 3)) * 10.0, np.float32)
+        mask = np.ones((bucket,), np.float32)
+
+        def call():
+            return dk.max_diameters_sq_pallas(
+                verts, mask, block=block, variant=variant, **kw
+            )
+    else:
+        verts = np.asarray(
+            rng.normal(size=(batch, bucket, 3)) * 10.0, np.float32
         )
+        masks = np.ones((batch, bucket), np.float32)
+
+        @jax.jit
+        def mapped(v, m):
+            return jax.lax.map(
+                lambda a: dk.max_diameters_sq_pallas(
+                    a[0], a[1], block=block, variant=variant, **kw
+                ),
+                (v, m),
+            )
+
+        def call():
+            return mapped(verts, masks)
 
     for _ in range(warmup):
         jax.block_until_ready(call())
@@ -205,6 +273,7 @@ def sweep_diameter(
     *,
     variants=DEFAULT_VARIANTS,
     blocks=DEFAULT_BLOCKS,
+    batch: int = 1,
     repeat: int = 2,
 ):
     """Measure every (variant, block) candidate; returns (best, table).
@@ -219,7 +288,7 @@ def sweep_diameter(
     for variant in variants:
         for block in usable:
             t = measure_diameter_config(
-                bucket, backend, variant, block, repeat=repeat
+                bucket, backend, variant, block, batch=batch, repeat=repeat
             )
             table[f"{variant}/{block}"] = t * 1e6
             if t < best_t:
@@ -240,24 +309,26 @@ def get_diameter_config(
     bucket: int,
     backend: str,
     *,
+    batch: int = 1,
     cache: AutotuneCache | None = None,
     variants=DEFAULT_VARIANTS,
     blocks=DEFAULT_BLOCKS,
     repeat: int = 2,
 ) -> DiameterConfig:
-    """Cached-or-swept best (variant, block) for a vertex bucket.
+    """Cached-or-swept best (variant, block) for a (bucket, depth) pair.
 
     The fast path is a cache hit -- no kernel runs at all.  A miss sweeps
-    (when allowed, see module docstring), persists the winner + table, and
-    returns it; when sweeping is disallowed the default config is returned
-    without being cached (so a later TPU run can still measure).
+    (when allowed, see module docstring) at the batch-depth bucket of
+    ``batch``, persists the winner + table, and returns it; when sweeping
+    is disallowed the default config is returned without being cached (so
+    a later TPU run can still measure).
     """
     from repro.kernels import diameter as dk
 
     if backend == "ref":
         return DEFAULT_CONFIG
     cache = cache or AutotuneCache()
-    key = sweep_key(bucket, backend)
+    key = sweep_key(bucket, backend, batch)
     hit = cache.get(key)
     if hit is not None:
         # validate: the persistent cache can outlive a rename/removal of a
@@ -271,7 +342,8 @@ def get_diameter_config(
     if not _sweep_allowed(backend):
         return DEFAULT_CONFIG
     best, table = sweep_diameter(
-        bucket, backend, variants=variants, blocks=blocks, repeat=repeat
+        bucket, backend, variants=variants, blocks=blocks,
+        batch=batch_bucket(batch), repeat=repeat,
     )
     cache.put(
         key,
@@ -312,20 +384,36 @@ def measure_mc_config(
     block,
     chunk: int,
     *,
+    batch: int = 1,
     repeat: int = 2,
     warmup: int = 1,
 ) -> float:
-    """Best-of-``repeat`` wall-clock seconds for one MC (block, chunk)."""
+    """Best-of-``repeat`` wall-clock seconds for one MC (block, chunk).
+
+    ``batch > 1`` measures the staged batched launch
+    (``mc_volume_area_batch_pallas`` over a (batch, ...) stack) the
+    device-pool pass-2a feed actually issues at that depth.
+    """
     from repro.core import dispatcher
     from repro.kernels import marching_cubes as mck
 
     vol = _mc_probe_volume(tuple(int(s) for s in shape))
     kw = dispatcher.kernel_kwargs(backend)
 
-    def call():
-        return mck.mc_volume_area_pallas(
-            vol, 0.5, (1.0, 1.0, 1.0), block=tuple(block), chunk=chunk, **kw
-        )
+    if batch <= 1:
+        def call():
+            return mck.mc_volume_area_pallas(
+                vol, 0.5, (1.0, 1.0, 1.0), block=tuple(block), chunk=chunk,
+                **kw
+            )
+    else:
+        vols = np.broadcast_to(vol, (batch,) + vol.shape)
+        sps = np.ones((batch, 3), np.float32)
+
+        def call():
+            return mck.mc_volume_area_batch_pallas(
+                vols, 0.5, sps, block=tuple(block), chunk=chunk, **kw
+            )
 
     for _ in range(warmup):
         jax.block_until_ready(call())
@@ -368,6 +456,7 @@ def sweep_mc(
     *,
     blocks=DEFAULT_MC_BLOCKS,
     chunks=DEFAULT_MC_CHUNKS,
+    batch: int = 1,
     repeat: int = 2,
 ):
     """Measure every valid MC (block, chunk) candidate; (best, table).
@@ -377,7 +466,9 @@ def sweep_mc(
     table: dict[str, float] = {}
     best, best_t = None, float("inf")
     for block, chunk in mc_candidates(blocks, chunks):
-        t = measure_mc_config(shape, backend, block, chunk, repeat=repeat)
+        t = measure_mc_config(
+            shape, backend, block, chunk, batch=batch, repeat=repeat
+        )
         table[f"{block[0]}x{block[1]}x{block[2]}/{chunk}"] = t * 1e6
         if t < best_t:
             best, best_t = MCConfig(block, chunk), t
@@ -406,12 +497,13 @@ def get_mc_config(
     shape,
     backend: str,
     *,
+    batch: int = 1,
     cache: AutotuneCache | None = None,
     blocks=DEFAULT_MC_BLOCKS,
     chunks=DEFAULT_MC_CHUNKS,
     repeat: int = 2,
 ) -> MCConfig:
-    """Cached-or-swept best MC (brick, chunk) for a padded-volume bucket.
+    """Cached-or-swept best MC (brick, chunk) per (volume bucket, depth).
 
     Same contract as :func:`get_diameter_config`: cache hit -> no kernel
     runs; miss sweeps when allowed and persists winner + table; disallowed
@@ -423,7 +515,7 @@ def get_mc_config(
         return DEFAULT_MC_CONFIG
     shape = tuple(int(s) for s in shape)
     cache = cache or AutotuneCache()
-    key = mc_key(shape, backend)
+    key = mc_key(shape, backend, batch)
     hit = cache.get(key)
     if hit is not None:
         cfg = _valid_mc_record(hit)
@@ -432,7 +524,8 @@ def get_mc_config(
     if not _sweep_allowed(backend):
         return DEFAULT_MC_CONFIG
     best, table = sweep_mc(
-        shape, backend, blocks=blocks, chunks=chunks, repeat=repeat
+        shape, backend, blocks=blocks, chunks=chunks,
+        batch=batch_bucket(batch), repeat=repeat,
     )
     cache.put(
         key,
@@ -457,23 +550,27 @@ def measure_compact_config(
     backend: str,
     block: int,
     *,
+    batch: int = 4,
     repeat: int = 2,
     warmup: int = 1,
     seed: int = 0,
 ) -> float:
     """Best-of-``repeat`` wall-clock seconds for one compaction block.
 
-    The probe keeps ~25% of a ``(4, bucket)`` batch -- the pipeline's
+    The probe keeps ~25% of a ``(batch, bucket)`` stack -- the pipeline's
     typical keep fraction -- and compacts into the ``bucket // 4`` bucket,
     so the measured trade-off (grid steps vs per-step one-hot matmul size)
-    matches the production scatter.
+    matches the production scatter.  The one-hot matmul cost scales with
+    the (B, M, cap) triple, so ``batch`` tracks the cap-group depth the
+    pipeline actually launches.
     """
     from repro.core import dispatcher
     from repro.kernels import compact as ck
 
+    batch = max(1, int(batch))
     rng = np.random.default_rng(seed)
-    verts = np.asarray(rng.normal(size=(4, bucket, 3)) * 10.0, np.float32)
-    keep = rng.random((4, bucket)) < 0.25
+    verts = np.asarray(rng.normal(size=(batch, bucket, 3)) * 10.0, np.float32)
+    keep = rng.random((batch, bucket)) < 0.25
     cap = max(512, int(bucket) // 4)
     kw = dispatcher.kernel_kwargs(backend)
 
@@ -495,6 +592,7 @@ def sweep_compact(
     backend: str,
     *,
     blocks=DEFAULT_COMPACT_BLOCKS,
+    batch: int = 4,
     repeat: int = 2,
 ):
     """Measure every compaction block candidate; returns (best, table).
@@ -508,7 +606,9 @@ def sweep_compact(
     table: dict[str, float] = {}
     best, best_t = None, float("inf")
     for block in usable:
-        t = measure_compact_config(bucket, backend, block, repeat=repeat)
+        t = measure_compact_config(
+            bucket, backend, block, batch=batch, repeat=repeat
+        )
         table[str(block)] = t * 1e6
         if t < best_t:
             best, best_t = CompactConfig(block), t
@@ -519,11 +619,12 @@ def get_compact_config(
     bucket: int,
     backend: str,
     *,
+    batch: int = 1,
     cache: AutotuneCache | None = None,
     blocks=DEFAULT_COMPACT_BLOCKS,
     repeat: int = 2,
 ) -> CompactConfig:
-    """Cached-or-swept best compaction scatter block for an M bucket.
+    """Cached-or-swept best compaction scatter block per (M bucket, depth).
 
     Same contract as :func:`get_diameter_config`: cache hit -> no kernel
     runs; miss sweeps when allowed and persists winner + table; disallowed
@@ -532,7 +633,7 @@ def get_compact_config(
     if backend == "ref":
         return DEFAULT_COMPACT_CONFIG
     cache = cache or AutotuneCache()
-    key = compact_key(bucket, backend)
+    key = compact_key(bucket, backend, batch)
     hit = cache.get(key)
     if hit is not None:
         try:
@@ -543,7 +644,10 @@ def get_compact_config(
             return cfg
     if not _sweep_allowed(backend):
         return DEFAULT_COMPACT_CONFIG
-    best, table = sweep_compact(bucket, backend, blocks=blocks, repeat=repeat)
+    best, table = sweep_compact(
+        bucket, backend, blocks=blocks, batch=batch_bucket(batch),
+        repeat=repeat,
+    )
     cache.put(
         key,
         {

@@ -1,11 +1,13 @@
-"""Autotune cache: versioned schema round-trip, v1 migration, MC sweeps.
+"""Autotune cache: versioned schema round-trip, v1/v2 migration, MC sweeps.
 
 The cache outlives code versions (it sits in ~/.cache across PRs), so the
 failure modes under test are the real ones: PR 1 wrote a flat schema-less
-JSON object; files can be truncated or hand-edited; entries can reference
+JSON object; PR 2/3 wrote a v2 envelope whose keys carry no batch-depth
+segment; files can be truncated or hand-edited; entries can reference
 configurations that no longer validate.  Every one of those must degrade
-to a re-sweep, never a crash, and diameter + MC entries must coexist in
-one file.
+to a re-sweep (or, for v1/v2, migrate to the depth-1 slot of the v3 key
+space), never a crash, and diameter + MC + compact entries must coexist
+in one file.
 """
 import json
 import os
@@ -45,19 +47,35 @@ def _v1_payload():
 # ---------------------------------------------------------------------------
 
 
-def test_v2_schema_roundtrip_mixed_entries(cache_path):
+def test_v3_schema_roundtrip_mixed_entries(cache_path):
     cache = autotune.AutotuneCache()
-    cache.put("diameter/interpret/M512",
+    cache.put(autotune.sweep_key(512, "interpret"),
               {"variant": "seqacc", "block": 256, "us": 1.0, "table": {}})
     cache.put(autotune.mc_key(SHAPE, "interpret"),
               {"block": [8, 8, 8], "chunk": 256, "us": 2.0, "table": {}})
+    cache.put(autotune.sweep_key(512, "interpret", batch=8),
+              {"variant": "gram", "block": 128, "us": 0.5, "table": {}})
     raw = json.load(open(cache_path))
     assert raw["schema"] == autotune.SCHEMA_VERSION
     assert set(raw["entries"]) == {
-        "diameter/interpret/M512", "mc/interpret/S16x16x16"
+        "diameter/interpret/M512/B1", "mc/interpret/S16x16x16/B1",
+        "diameter/interpret/M512/B8",
     }
-    assert cache.get("diameter/interpret/M512")["variant"] == "seqacc"
-    assert cache.get("mc/interpret/S16x16x16")["chunk"] == 256
+    assert cache.get("diameter/interpret/M512/B1")["variant"] == "seqacc"
+    assert cache.get("mc/interpret/S16x16x16/B1")["chunk"] == 256
+    # depth buckets are independent slots of the same (backend, bucket)
+    assert cache.get("diameter/interpret/M512/B8")["variant"] == "gram"
+
+
+def test_batch_bucket_is_a_pow2_ladder():
+    assert [autotune.batch_bucket(b) for b in (1, 2, 3, 4, 5, 8, 9, 33)] == \
+        [1, 2, 4, 4, 8, 8, 16, 64]
+    assert autotune.sweep_key(256, "pallas", batch=6) == \
+        "diameter/pallas/M256/B8"
+    assert autotune.compact_key(1024, "pallas", batch=3) == \
+        "compact/pallas/M1024/B4"
+    assert autotune.mc_key(SHAPE, "pallas", batch=2) == \
+        "mc/pallas/S16x16x16/B2"
 
 
 def test_v1_file_migrates_on_load(cache_path, monkeypatch):
@@ -80,9 +98,71 @@ def test_v1_file_upgraded_and_preserved_on_put(cache_path):
               {"block": [8, 8, 8], "chunk": 512, "us": 3.0, "table": {}})
     raw = json.load(open(cache_path))
     assert raw["schema"] == autotune.SCHEMA_VERSION
-    # the PR 1 diameter entry rode along into the v2 envelope
-    assert raw["entries"]["diameter/interpret/M256"]["variant"] == "gram"
-    assert raw["entries"]["mc/interpret/S16x16x16"]["chunk"] == 512
+    # the PR 1 diameter entry rode along into the v3 envelope, migrated
+    # to the depth-1 slot (PR 1 sweeps measured single-case launches)
+    assert raw["entries"]["diameter/interpret/M256/B1"]["variant"] == "gram"
+    assert raw["entries"]["mc/interpret/S16x16x16/B1"]["chunk"] == 512
+
+
+def _v2_payload():
+    # PR 2/3-era layout: versioned envelope, depth-less keys
+    return {
+        "schema": 2,
+        "entries": {
+            "diameter/interpret/M256": {
+                "variant": "gram", "block": 128, "us": 11.0,
+                "table": {"gram/128": 11.0},
+            },
+            "compact/interpret/M1024": {"block": 256, "us": 9.0, "table": {}},
+            "mc/interpret/S16x16x16": {
+                "block": [16, 8, 8], "chunk": 256, "us": 2.0, "table": {},
+            },
+            "bogus-non-dict": 17,
+        },
+    }
+
+
+def test_v2_file_migrates_on_load(cache_path, monkeypatch):
+    """Every v2 entry kind resolves from its migrated /B1 slot, sweep-free;
+    a depth the v2 file never measured still re-sweeps."""
+    with open(cache_path, "w") as f:
+        json.dump(_v2_payload(), f)
+    for name in ("sweep_diameter", "sweep_mc", "sweep_compact"):
+        monkeypatch.setattr(
+            autotune, name,
+            lambda *a, **k: pytest.fail("migrated v2 entry ignored: re-swept"),
+        )
+    assert autotune.get_diameter_config(256, "interpret") == \
+        autotune.DiameterConfig("gram", 128)
+    assert autotune.get_compact_config(1024, "interpret") == \
+        autotune.CompactConfig(256)
+    assert autotune.get_mc_config(SHAPE, "interpret") == \
+        autotune.MCConfig((16, 8, 8), 256)
+    # an unmeasured depth is a miss: the B4 slot must sweep
+    swept = []
+    monkeypatch.setattr(
+        autotune, "sweep_diameter",
+        lambda *a, **k: (
+            swept.append(a) or (autotune.DiameterConfig("seqacc", 128),
+                                {"seqacc/128": 1.0})
+        ),
+    )
+    autotune.get_diameter_config(256, "interpret", batch=4)
+    assert len(swept) == 1
+
+
+def test_v2_file_upgraded_and_preserved_on_put(cache_path):
+    with open(cache_path, "w") as f:
+        json.dump(_v2_payload(), f)
+    cache = autotune.AutotuneCache()
+    cache.put(autotune.sweep_key(256, "interpret", batch=4),
+              {"variant": "seqacc", "block": 128, "us": 1.0, "table": {}})
+    raw = json.load(open(cache_path))
+    assert raw["schema"] == autotune.SCHEMA_VERSION
+    assert set(raw["entries"]) == {
+        "diameter/interpret/M256/B1", "compact/interpret/M1024/B1",
+        "mc/interpret/S16x16x16/B1", "diameter/interpret/M256/B4",
+    }  # migrated + new depth slot; the malformed non-dict entry dropped
 
 
 def test_unknown_future_schema_resweeps_without_destroying_file(
@@ -171,7 +251,7 @@ def test_mc_and_diameter_entries_coexist(cache_path, monkeypatch):
     autotune.get_mc_config(SHAPE, "interpret", **MC_RESTRICT)
     raw = json.load(open(cache_path))
     assert set(raw["entries"]) == {
-        "diameter/interpret/M128", "mc/interpret/S16x16x16"
+        "diameter/interpret/M128/B1", "mc/interpret/S16x16x16/B1"
     }
     # each lookup reads back only its own entry
     assert autotune.get_diameter_config(128, "interpret").block == 64

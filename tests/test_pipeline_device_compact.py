@@ -306,7 +306,7 @@ def test_compact_sweep_round_trip(tmp_path, monkeypatch):
     assert cfg.block in (128, 256)
     data = json.loads(path.read_text())
     assert data["schema"] == autotune.SCHEMA_VERSION
-    rec = data["entries"]["compact/interpret/M512"]
+    rec = data["entries"]["compact/interpret/M512/B1"]
     assert rec["block"] == cfg.block and set(rec["table"]) == {"128", "256"}
     # second resolution is a pure cache hit even with sweeping disabled
     monkeypatch.setenv("REPRO_AUTOTUNE", "0")
