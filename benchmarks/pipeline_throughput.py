@@ -4,20 +4,23 @@ The paper's motivating workload is ~40 000 CT scans on a cluster (xLUNGS);
 its discussion notes that for complete workflows data loading dominates
 small cases and DMA/compute overlap is the open opportunity.  This
 benchmark runs the BatchedExtractor over a batch of synthetic cases in
-six modes -- the single-case loop, the legacy one-pass batched pipeline
+eight modes -- the single-case loop, the legacy one-pass batched pipeline
 (no pruning: the unpruned baseline), the two-pass pruned pipeline with
 PR 2's host-side survivor compaction (``device_compact=False``), the
 device-resident counted pipeline (PR 3's default), the sync-free
 ``schedule='static'`` pipeline (PR 4: zero pass-1 host fetches, padded
-pair-sweep work instead), and the streaming front-end
-(``extract_stream``, window overlap) -- and reports cases/second for
-each, the throughput story GPU/TPU acceleration exists to serve.
+pair-sweep work instead), the cost-model-driven auto configuration
+(PR 5: ``schedule='auto'`` + sync-free ``prep='hint'``), the streaming
+front-end (``extract_stream``, window overlap), and the fully
+self-configuring stream (``window='auto'``) -- and reports cases/second
+for each, the throughput story GPU/TPU acceleration exists to serve.
 
 ``run(records=...)`` appends one dict per mode; ``benchmarks.run
 --json-pipeline`` serialises them as the ``BENCH_pipeline.json``
 perf-trajectory record (cases/sec per mode across PRs; the
-``two_pass_static`` and ``streaming`` rows are PR 4's additions vs PR 3's
-``two_pass_device_compact``).
+``two_pass_auto`` and ``streaming_auto`` rows are PR 5's additions, and
+``scripts/check_bench.py`` gates fresh rows against the committed
+trajectory).
 """
 from __future__ import annotations
 
@@ -76,22 +79,30 @@ def run(n_cases: int = 12, records=None, repeat: int = 8):
     pruned = BatchedExtractor(backend="ref", prune=True, device_compact=False)
     device = BatchedExtractor(backend="ref", prune=True, device_compact=True)
     static = BatchedExtractor(backend="ref", schedule="static")
+    auto = BatchedExtractor(backend="ref", schedule="auto", prep="hint")
     # the unpruned baseline is ~15x slower per run: two measured runs
     # bound its noise well enough without dominating the bench's runtime
     ((res_u, stats_u),) = _best_interleaved((unpruned,), cases, 2)
-    # host- vs device-compaction vs static schedule are close contests:
-    # interleave their runs so machine-load drift cannot bias the winner
-    (res_p, stats_p), (res_d, stats_d), (res_s, stats_s) = _best_interleaved(
-        (pruned, device, static), cases, repeat
+    # host- vs device-compaction vs static schedule vs the cost-model-
+    # driven auto configuration are close contests: interleave their runs
+    # so machine-load drift cannot bias the winner
+    ((res_p, stats_p), (res_d, stats_d), (res_s, stats_s),
+     (res_a, stats_a)) = _best_interleaved(
+        (pruned, device, static, auto), cases, repeat
     )
-    assert all(r is not None for r in res_u + res_p + res_d + res_s)
+    assert all(r is not None for r in res_u + res_p + res_d + res_s + res_a)
     for a, b in zip(res_u, res_p):  # pruning must not move the features
         np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
     for a, b in zip(res_p, res_d):  # device compaction must not move a BIT
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     for a, b in zip(res_d, res_s):  # nor may the sync-free static schedule
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(res_d, res_a):  # nor hint prep + the auto schedule
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     assert stats_s["host_fetches"].get("pass1", 0) == 0  # the claim measured
+    # the sync-free-prep claim, measured the same way: hint prep performed
+    # zero per-case pass-0 syncs across every run of the auto mode
+    assert auto.executor.transfer_log.get("prep", 0) == 0
 
     # streaming front-end: same windows, prep of k+1 overlapping exec of k
     def stream_once():
@@ -105,6 +116,22 @@ def run(n_cases: int = 12, records=None, repeat: int = 8):
     )
     for a, b in zip(res_d, res_st):  # streaming must not move a bit either
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # fully self-configuring stream: census-sized windows, cost-model
+    # schedule, sync-free hint prep (the PR 5 acceptance configuration)
+    def stream_auto_once():
+        t0 = time.perf_counter()
+        rows = list(auto.extract_stream(iter(cases), window="auto"))
+        return rows, time.perf_counter() - t0
+
+    stream_auto_once()  # warmup
+    res_sa, t_stream_auto = min(
+        (stream_auto_once() for _ in range(max(2, repeat // 2))),
+        key=lambda r: r[1],
+    )
+    for a, b in zip(res_d, res_sa):  # nor the auto-everything stream
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert auto.executor.transfer_log.get("prep", 0) == 0
 
     def emit(name, seconds, stats=None, **extra):
         derived = dict(
@@ -159,10 +186,26 @@ def run(n_cases: int = 12, records=None, repeat: int = 8):
         speedup_vs_counted=f"{stats_d['seconds'] / stats_s['seconds']:.2f}",
     )
     emit(
+        "two_pass_auto", stats_a["seconds"], stats_a,
+        buckets=stats_a["buckets"],
+        vertex_buckets=stats_a["vertex_buckets"],
+        prep="hint",
+        resolved_schedule=stats_a["plan"]["schedule"],
+        pass0_syncs=0,
+        speedup_vs_loop=f"{t_loop / stats_a['seconds']:.2f}",
+        speedup_vs_counted=f"{stats_d['seconds'] / stats_a['seconds']:.2f}",
+    )
+    emit(
         "streaming", t_stream,
         speedup_vs_loop=f"{t_loop / t_stream:.2f}",
         speedup_vs_batched=f"{stats_s['seconds'] / t_stream:.2f}",
         window=max(4, n_cases // 2),
+    )
+    emit(
+        "streaming_auto", t_stream_auto,
+        speedup_vs_loop=f"{t_loop / t_stream_auto:.2f}",
+        speedup_vs_fixed_stream=f"{t_stream / t_stream_auto:.2f}",
+        window="auto",
     )
     return rows
 

@@ -8,17 +8,24 @@ the dataset-level streaming front-end (``extract_stream``):
     batch; host prep (load + crop + pad + bucket) of window k+1 overlaps
     device execution of window k (the DMA/compute overlap the paper's
     conclusion calls out);
-  * ``--schedule static`` removes the pass-1 survivor-count sync, so the
-    submit path never blocks on the device -- the right schedule for
-    streaming (bit-identical features; see core/plan.py);
-  * every window's plan census (shape/cap buckets, pad waste) prints at
-    submit time, the telemetry a cluster operator watches for bucket
-    explosion on heterogeneous cohorts;
+  * the pipeline configures ITSELF by default (the PR 5 cost-model
+    layer, ``runtime/costmodel``): ``--window auto`` closes windows at
+    census-decided bucket boundaries, ``--schedule auto`` picks counted
+    vs static per window from the calibrated ``sync/<backend>`` probe,
+    and ``--prep hint`` sizes vertex caps from metadata alone so the
+    submit path performs ZERO per-case host syncs -- all bit-identical
+    to the fixed knobs (tier-1-locked), which remain available for
+    pinning;
+  * every window's plan census (shape/cap buckets, pad waste, resolved
+    schedule) prints at submit time, the telemetry a cluster operator
+    watches for bucket explosion on heterogeneous cohorts;
   * completed features are checkpointed to a JSONL manifest as each
     window drains, so a killed job resumes where it left off (cluster
     preemption safety) -- at most one window of work is ever redone.
 
-    PYTHONPATH=src python examples/cluster_pipeline.py --cases 24 --window 8
+    PYTHONPATH=src python examples/cluster_pipeline.py --cases 24
+    PYTHONPATH=src python examples/cluster_pipeline.py --cases 24 \\
+        --window 8 --schedule static --prep count   # pin every knob
 """
 import argparse
 import json
@@ -32,15 +39,25 @@ FEATURE_NAMES = ("MeshVolume", "SurfaceArea", "Maximum3DDiameter",
                  "Maximum2DDiameterColumn", "n_vertices")
 
 
+def _window(value: str):
+    return value if value == "auto" else int(value)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--cases", type=int, default=16)
-    ap.add_argument("--window", type=int, default=8)
+    ap.add_argument("--window", type=_window, default="auto",
+                    help="cases per stream window, or 'auto' for "
+                         "census-decided adaptive boundaries")
     ap.add_argument("--out", default="/tmp/repro_pipeline/features.jsonl")
     ap.add_argument("--variant", default="seqacc")
-    ap.add_argument("--schedule", default="static",
-                    choices=("static", "counted"),
-                    help="pass-2b bucket schedule (static: sync-free pass 1)")
+    ap.add_argument("--schedule", default="auto",
+                    choices=("auto", "static", "counted"),
+                    help="pass-2b bucket schedule (auto: cost-model-picked "
+                         "per window; static: sync-free pass 1)")
+    ap.add_argument("--prep", default="hint", choices=("hint", "count"),
+                    help="pass-0 cap sizing (hint: metadata-only, "
+                         "sync-free; count: per-case measured)")
     args = ap.parse_args()
 
     out = Path(args.out)
@@ -63,10 +80,11 @@ def main():
               f"{s['shape_buckets']} shape buckets, "
               f"{s['cap_buckets']} vertex buckets, "
               f"pad waste mask {s['mask_pad_waste']:.0%} / "
-              f"verts {s['vertex_pad_waste']:.0%}")
+              f"verts {s['vertex_pad_waste']:.0%}, "
+              f"schedule={s['schedule']}")  # the cost model's per-window pick
 
     ext = BatchedExtractor(  # mesh=None: single device
-        variant=args.variant, schedule=args.schedule
+        variant=args.variant, schedule=args.schedule, prep=args.prep
     )
     n_done = 0
     import time
@@ -83,10 +101,12 @@ def main():
     if n_done == 0:
         print("nothing to do")
         return
+    log = ext.executor.transfer_log
     print(f"extracted {n_done} cases in {dt:.1f}s "
           f"({n_done / dt:.2f} cases/s, schedule={args.schedule}, "
-          f"pass-1 host syncs: "
-          f"{ext.executor.transfer_log.get('pass1', 0)})")
+          f"prep={args.prep}, window={args.window}, "
+          f"per-case host syncs: pass0={log.get('prep', 0)} "
+          f"pass1={log.get('pass1', 0)})")
     print(f"manifest: {out}")
 
 

@@ -1,0 +1,149 @@
+#!/usr/bin/env python
+"""Bench-regression gate: fresh BENCH_*.json rows vs the committed trajectory.
+
+``scripts/ci_smoke.sh`` re-emits ``BENCH_pipeline.json`` (cases/second per
+pipeline mode) and ``BENCH_diameter.json`` (us/call per kernel variant) on
+every run; this gate compares the freshly written rows against the rows
+COMMITTED at the baseline ref (``git show <ref>:<path>`` -- the working
+tree copy has already been overwritten by the time the gate runs) and
+fails on a >``--threshold`` (default 30%) throughput regression for any
+row name present in both records.
+
+Noise policy: both benches already record best-of-N interleaved
+measurements (see benchmarks/pipeline_throughput.py), so a 30% drop is a
+real regression, not scheduler jitter.  Rows new to the fresh record
+pass (there is nothing to compare), rows that disappeared are reported
+as a warning (a silently dropped bench mode should be loud), and a
+missing baseline (first commit, renamed file, no git) skips the gate
+with a notice rather than failing -- the gate guards trajectories, it
+does not invent them.
+
+Usage (what ci_smoke.sh stage 'bench_gate' runs):
+
+    python scripts/check_bench.py --pipeline BENCH_pipeline.json \
+                                  --diameter BENCH_diameter.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+
+# metric per bench record: (row key, higher-is-better)
+METRICS = {
+    "pipeline": ("cases_per_second", True),
+    "diameter": ("us_per_call", False),
+}
+
+
+def load_fresh(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def load_baseline(path: str, ref: str) -> dict | None:
+    """The committed record at ``ref`` (None when unavailable)."""
+    try:
+        proc = subprocess.run(
+            ["git", "show", f"{ref}:{path}"],
+            capture_output=True, text=True, timeout=60,
+        )
+    except (OSError, subprocess.TimeoutExpired):
+        return None
+    if proc.returncode != 0:
+        return None
+    try:
+        data = json.loads(proc.stdout)
+    except ValueError:
+        return None
+    return data if isinstance(data, dict) else None
+
+
+def check_record(label: str, fresh: dict, baseline: dict,
+                 threshold: float) -> list[str]:
+    """Compare one bench record pair; returns failure messages."""
+    metric, higher = METRICS[label]
+    base_rows = {
+        r.get("name"): r for r in baseline.get("rows", [])
+        if isinstance(r, dict)
+    }
+    fresh_names = set()
+    failures = []
+    for row in fresh.get("rows", []):
+        name = row.get("name")
+        fresh_names.add(name)
+        base = base_rows.get(name)
+        if base is None:
+            print(f"  {label}/{name}: NEW (no baseline row)")
+            continue
+        try:
+            f, b = float(row[metric]), float(base[metric])
+        except (KeyError, TypeError, ValueError):
+            print(f"  {label}/{name}: metric {metric!r} unreadable, skipped")
+            continue
+        if b <= 0 or f <= 0:
+            print(f"  {label}/{name}: non-positive {metric}, skipped")
+            continue
+        # ratio > 1 means the fresh row is FASTER than the baseline
+        ratio = (f / b) if higher else (b / f)
+        verdict = "OK" if ratio >= 1.0 - threshold else "REGRESSION"
+        print(f"  {label}/{name}: base={b:.4g} fresh={f:.4g} "
+              f"{metric} speed-ratio={ratio:.3f} {verdict}")
+        if verdict != "OK":
+            failures.append(
+                f"{label}/{name}: {metric} regressed {(1 - ratio):.0%} "
+                f"(base {b:.4g} -> fresh {f:.4g}, threshold "
+                f"{threshold:.0%})"
+            )
+    for name in base_rows.keys() - fresh_names:
+        print(f"  WARNING {label}/{name}: baseline row missing from the "
+              "fresh record (bench mode dropped?)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--pipeline", default=None,
+                    help="fresh BENCH_pipeline.json (also the baseline "
+                         "path inside the git ref)")
+    ap.add_argument("--diameter", default=None,
+                    help="fresh BENCH_diameter.json")
+    ap.add_argument("--threshold", type=float, default=0.30,
+                    help="max tolerated fractional slowdown (default 0.30)")
+    ap.add_argument("--ref", default="HEAD",
+                    help="git ref holding the committed baseline")
+    args = ap.parse_args(argv)
+    if args.pipeline is None and args.diameter is None:
+        ap.error("nothing to check: pass --pipeline and/or --diameter")
+
+    failures: list[str] = []
+    for label, path in (("pipeline", args.pipeline),
+                        ("diameter", args.diameter)):
+        if path is None:
+            continue
+        try:
+            fresh = load_fresh(path)
+        except (OSError, ValueError) as e:
+            print(f"{label}: fresh record {path} unreadable ({e})")
+            failures.append(f"{label}: fresh record unreadable")
+            continue
+        baseline = load_baseline(path, args.ref)
+        if baseline is None:
+            print(f"{label}: no committed baseline at {args.ref}:{path}; "
+                  "skipping (nothing to regress against)")
+            continue
+        print(f"{label}: fresh {path} vs {args.ref}:{path}")
+        failures += check_record(label, fresh, baseline, args.threshold)
+
+    if failures:
+        print("\nbench gate FAILED:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("\nbench gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,39 +1,69 @@
 #!/usr/bin/env bash
-# CI smoke gate: the ROADMAP tier-1 test command plus a fast interpret-mode
-# benchmark pass, so regressions in kernel wiring (dispatch, autotune,
-# pruning, batched pipeline, benchmark plumbing) fail fast.
+# CI smoke gate, staged: the ROADMAP tier-1 test command, the explicitly
+# named parity/schedule gates, the interpret-mode benchmark passes that
+# re-emit the BENCH_*.json perf trajectories, and the bench-regression
+# gate that compares them against the committed baseline -- with per-stage
+# wall-time reporting so CI logs show where the minutes go.
 #
 # Usage: scripts/ci_smoke.sh
 #   SMOKE_TIER1_ONLY=1  run only @tier1-marked tests (quick local gate)
+#   SMOKE_SKIP_BENCH=1  skip the benchmark + bench-gate stages (tests only)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-# 1) tier-1 gate (ROADMAP "Tier-1 verify"), fail-fast
-python -m pytest -x -q ${SMOKE_TIER1_ONLY:+-m tier1}
+STAGE_NAMES=()
+STAGE_SECS=()
+stage() {  # stage <name> <cmd...>: run one named stage, record wall time
+  local name=$1; shift
+  echo "== ci_smoke stage ${#STAGE_NAMES[@]}: ${name}"
+  local t0=$SECONDS
+  "$@"
+  local dt=$((SECONDS - t0))
+  STAGE_NAMES+=("$name")
+  STAGE_SECS+=("$dt")
+  echo "== ci_smoke stage ${name}: ${dt}s"
+}
 
-# 2) two-pass parity + autotune-cache gates: named explicitly (under the
-#    tier1 marker) so the batched==single contract, the device==host
-#    compaction bit-identity, the gram precision guardrail, and the cache
-#    schema can never silently fall out of the gate
-python -m pytest -q -m tier1 tests/test_pipeline_pruned_batch.py \
+# 1) tier-1 gate (ROADMAP "Tier-1 verify"), fail-fast
+stage tier1 python -m pytest -x -q ${SMOKE_TIER1_ONLY:+-m tier1}
+
+# 2) parity + autotune-cache gates: named explicitly (under the tier1
+#    marker) so the batched==single contract, the device==host compaction
+#    bit-identity, the gram precision guardrail, and the cache schema can
+#    never silently fall out of the gate
+stage parity python -m pytest -q -m tier1 \
+    tests/test_pipeline_pruned_batch.py \
     tests/test_pipeline_device_compact.py \
     tests/test_gram_precision.py \
     tests/test_autotune_cache.py
 
-# 2b) streaming + static-schedule gates: extract_stream == run == single
-#     bit-identity, static == counted bit-identity (incl. the retry path),
-#     zero pass-1 host fetches under the static schedule, and device-pool
-#     MC == the host-stacked feed it replaced
-python -m pytest -q -m tier1 tests/test_plan_executor_stream.py
+# 3) scheduling gates: stream==batch==single bit-identity, static==counted
+#    (incl. the retry paths), zero pass-1/pass-0 host fetches under the
+#    static schedule / hint prep, and the cost-model decision layer
+#    (window='auto', schedule='auto', determinism)
+stage schedule python -m pytest -q -m tier1 \
+    tests/test_plan_executor_stream.py \
+    tests/test_costmodel_schedule.py
 
-# 3) kernel-wiring smoke: Fig.1 variant sweep (interpret mode) + the
-#    BENCH_diameter.json perf-trajectory record
-python -m benchmarks.run --only fig1 --json BENCH_diameter.json
-test -s BENCH_diameter.json
+if [[ "${SMOKE_SKIP_BENCH:-0}" != "1" ]]; then
+  # 4) kernel-wiring smoke: Fig.1 variant sweep (interpret mode) + the
+  #    BENCH_diameter.json perf-trajectory record
+  stage bench_diameter python -m benchmarks.run --only fig1 --json BENCH_diameter.json
+  test -s BENCH_diameter.json
 
-# 4) batched-throughput smoke: single loop vs unpruned vs two-pass pruned
-#    cases/sec, recorded as the BENCH_pipeline.json trajectory
-python -m benchmarks.run --only pipeline --json-pipeline BENCH_pipeline.json
-test -s BENCH_pipeline.json
-echo "ci_smoke: OK"
+  # 5) batched-throughput smoke: the pipeline mode ladder (single loop ->
+  #    streaming auto), recorded as the BENCH_pipeline.json trajectory,
+  #    then gated against the committed trajectory (>30% cases/s or
+  #    us/call regression on any named row fails)
+  stage bench_pipeline python -m benchmarks.run --only pipeline --json-pipeline BENCH_pipeline.json
+  test -s BENCH_pipeline.json
+  stage bench_gate python scripts/check_bench.py \
+      --pipeline BENCH_pipeline.json --diameter BENCH_diameter.json
+fi
+
+summary="ci_smoke: OK"
+for i in "${!STAGE_NAMES[@]}"; do
+  summary+=" ${STAGE_NAMES[$i]}=${STAGE_SECS[$i]}s"
+done
+echo "$summary"

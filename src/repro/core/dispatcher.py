@@ -92,6 +92,22 @@ def compact_config(backend: str, bucket: int, block="auto",
     return autotune.get_compact_config(int(bucket), backend, batch=batch).block
 
 
+def sync_cost(backend: str, cache=None) -> float:
+    """Resolve the modeled per-fetch d2h latency (microseconds).
+
+    Consults the ``sync/<backend>`` autotune-cache entry (the one-time
+    measured probe; ``repro.runtime.autotune.get_sync_cost``), falling
+    back to the documented default when no calibration exists and
+    probing is disallowed.  Unlike the kernel-config resolvers this is
+    meaningful for EVERY backend including 'ref' -- the sync cost
+    belongs to the device link, not to a kernel.  May run the measuring
+    probe, so call it OUTSIDE any traced function.
+    """
+    from repro.runtime import autotune  # local import: avoid cycle
+
+    return autotune.get_sync_cost(backend, cache=cache)
+
+
 def mc_config(backend: str, shape, block="auto", chunk: int | None = None,
               batch: int = 1):
     """Resolve the (brick, chunk) the marching-cubes kernel should run with.

@@ -44,6 +44,18 @@ Under ``schedule='static'`` the submit path never blocks on the device,
 so the overlap is complete; under ``'counted'`` the pass-1 count fetch
 re-serialises part of it (the measured trade-off is recorded in
 ROADMAP.md).
+
+Cost-model-driven knobs (PR 5, ``runtime/costmodel``): ``prep='hint'``
+sizes pass-0 caps from ``plan.vertex_hint`` metadata alone -- the last
+per-case host sync (``int(n)``) disappears; the true count rides to the
+collector as a device future, and the rare hint-overflow case re-runs
+count-sized at collect time (the same retry contract as the static
+keep-originals re-sweep).  ``schedule='auto'`` resolves counted-vs-
+static per window from the calibrated ``sync/<backend>`` probe and the
+window's census; ``extract_stream(window='auto')`` closes windows at
+census-decided boundaries.  ``prep='count'`` and fixed windows remain
+the parity baselines, and every auto knob is bit-identical to them
+(tier-1-locked).
 """
 from __future__ import annotations
 
@@ -87,6 +99,9 @@ class _Prepped:
     n_vertices: int = 0  # pre-prune dedup vertex count (a feature)
     vertex_cap: int = 0  # static M' bucket the diameter kernel compiles for
     prune_info: object | None = None
+    n_fut: object | None = None  # hint prep: true dedup count, ON DEVICE
+    prep_cap: int = 0  # hint prep: the pass-0 compaction cap (overflow ref;
+    # vertex_cap is overwritten by pass 1 with the pass-2b bucket)
 
 
 @dataclasses.dataclass
@@ -140,11 +155,15 @@ class PlanExecutor:
 
     N_FEATURES = 7  # [vol, area, d3, dxy, dxz, dyz, n_vertices]
 
+    SCHEDULES = (*planlib.SCHEDULES, "auto")
+    PREPS = ("count", "hint")
+
     def __init__(self, backend=None, variant="auto", mesh: Mesh | None = None,
                  data_axis: str = "data", prune: bool = True,
                  mc_block="auto", mc_chunk: int | None = None,
                  k_dirs: int = 16, device_compact: bool = True,
                  compact_block="auto", schedule: str = "counted",
+                 prep: str = "count", cost_model=None,
                  transfer_callback=None):
         self.backend = dispatcher.resolve_backend(backend)
         self.variant = variant
@@ -163,19 +182,43 @@ class PlanExecutor:
         self.k_dirs = k_dirs
         self.device_compact = device_compact
         self.compact_block = compact_block
-        if schedule not in planlib.SCHEDULES:
+        if schedule not in self.SCHEDULES:
             raise ValueError(
-                f"schedule must be one of {planlib.SCHEDULES}, got {schedule!r}"
+                f"schedule must be one of {self.SCHEDULES}, got {schedule!r}"
             )
-        if schedule == "static" and not (prune and device_compact):
+        if schedule in ("static", "auto") and not (prune and device_compact):
             raise ValueError(
-                "schedule='static' is a device-resident schedule: it requires "
-                "prune=True and device_compact=True"
+                f"schedule={schedule!r} is (or may resolve to) a "
+                "device-resident schedule: it requires prune=True and "
+                "device_compact=True"
             )
         self.schedule = schedule
+        if prep not in self.PREPS:
+            raise ValueError(f"prep must be one of {self.PREPS}, got {prep!r}")
+        if prep == "hint" and not (prune and device_compact):
+            raise ValueError(
+                "prep='hint' is a device-resident prep: it requires "
+                "prune=True and device_compact=True"
+            )
+        self.prep = prep
+        self._cost_model = cost_model
         self.transfer_log = collections.Counter()
         self._transfer_cb = transfer_callback
         self._compiled = {}
+
+    @property
+    def cost_model(self):
+        """Lazily-built decision layer (``runtime/costmodel.CostModel``).
+
+        Only the auto knobs (``schedule='auto'``, ``window='auto'``) read
+        it, so plain fixed-knob runs never touch the autotune cache file
+        through this path.
+        """
+        if self._cost_model is None:
+            from repro.runtime import costmodel  # local: keep import light
+
+            self._cost_model = costmodel.CostModel(self.backend)
+        return self._cost_model
 
     # -- host-sync accounting ----------------------------------------------
 
@@ -439,14 +482,24 @@ class PlanExecutor:
 
     # -- pass 0: prep + device staging --------------------------------------
 
-    def _prep_case(self, image, mask, spacing, fields: bool = True) -> _Prepped:
+    def _prep_case(self, image, mask, spacing, fields: bool = True,
+                   prep: str | None = None) -> _Prepped:
         """Crop, bucket-pad, device-stage, and compact one case (pass 0).
 
         ``fields=False`` (the legacy one-pass path, which recomputes the
         vertex field inside its fused kernel) skips the field/count
         launches and sizes the cap from the metadata hint
         (``plan.vertex_hint`` -- memoised, spacing-aware).
+
+        ``prep`` (default: the executor's configured prep) sizes the M
+        cap: ``'count'`` fetches the measured dedup count (one ``int(n)``
+        host sync per case -- the parity baseline), ``'hint'`` sizes it
+        from ``plan.vertex_hint`` metadata alone and leaves the true
+        count ON DEVICE (``n_fut``) for the collector -- pass 0 becomes
+        sync-free, at the cost of occasional over-allocation plus the
+        rare hint-overflow retry (``_resolve_hint_counts``).
         """
+        prep = prep or self.prep
         sp = np.asarray(spacing, np.float32)
         if not np.any(mask):
             return _Prepped(spacing=sp)  # empty mask: all-zero feature row
@@ -463,6 +516,20 @@ class PlanExecutor:
                 vertex_cap=ops.vertex_bucket(hint),  # recounts for the row)
             )
         f, n = _fields_count(mdev, jnp.asarray(sp))
+        if prep == "hint":
+            # sync-free prep: the cap comes from metadata alone; the true
+            # count stays a device future the collector drains.  A larger-
+            # than-needed cap is harmless (pruning and the pair sweep are
+            # padding-invariant, tier-1-locked); a SMALLER one drops
+            # vertices, which the collector detects and retries count-sized.
+            hint = planlib.vertex_hint(tuple(s - 2 for s in roi_shape), sp)
+            cap = ops.vertex_bucket(hint)
+            verts, vmask = _compact_cap(f, cap)
+            return _Prepped(
+                mask=mdev, spacing=sp, shape=bshape, roi_shape=roi_shape,
+                verts=verts, vmask=vmask, n_vertices=hint, vertex_cap=cap,
+                n_fut=n, prep_cap=cap,
+            )
         n = int(self._fetch("prep", n))
         cap = ops.vertex_bucket(n)
         verts, vmask = _compact_cap(f, cap)
@@ -634,12 +701,63 @@ class PlanExecutor:
             futs = self._submit(retries, self._diam_fn, self._stacked_chunk)
             d_out.update(self._drain(futs, "pass2b_retry"))
 
+    def _resolve_hint_counts(self, window, d_out):
+        """Hint-prep collect: deferred count fetch + hint-overflow retry.
+
+        ``prep='hint'`` sized each cap from metadata and left the true
+        dedup count on device; it is fetched here -- AFTER every launch
+        of the window was submitted, so no prep/submit ever blocked on it
+        -- both because the count is itself a feature of the row and to
+        detect overflow.  A case whose true count exceeds its hint cap
+        had vertices dropped by ``compact_vertices``: its pass-1/2b
+        results are discarded and it re-runs count-sized through the
+        single-case oracle stages (same kernels, same tuned configs --
+        the same retry contract as the static keep-originals re-sweep).
+        """
+        prepped = window.prepped
+        for i, p in enumerate(prepped):
+            if p.n_fut is None:
+                continue
+            n = int(self._fetch("collect_counts", p.n_fut))
+            overflow = n > p.prep_cap
+            p.n_vertices = n
+            p.n_fut = None
+            if not overflow:
+                continue
+            cap = ops.vertex_bucket(n)
+            f, _ = _fields_count(p.mask, jnp.asarray(p.spacing))
+            verts, vmask = _compact_cap(f, cap)
+            v2, m2, info = ops.prune_candidates(verts, vmask, k_dirs=self.k_dirs)
+            variant, block = self._resolve_diameter(len(v2))
+            d = ops.max_diameters(
+                v2, m2, backend=self.backend, variant=variant, block=block
+            )
+            d_out[i] = self._fetch("hint_retry", d)
+            p.verts, p.vmask = v2, m2
+            p.prune_info = info
+            p.vertex_cap = len(v2)
+
     # -- window API ----------------------------------------------------------
 
     def submit_window(self, cases, batch_size=None) -> _Window:
         """Prep one window and issue EVERY device launch for it (no drains)."""
         prepped = [self._prep_case(*c, fields=self.prune) for c in cases]
-        plan = planlib.build_plan([self._meta(p) for p in prepped], self.schedule)
+        return self.submit_prepped(prepped, batch_size)
+
+    def submit_prepped(self, prepped, batch_size=None) -> _Window:
+        """Plan + submit already-prepped cases (the adaptive stream preps
+        case by case, so planning must be callable on pass-0 state alone).
+
+        ``schedule='auto'`` resolves here, per window: the cost model
+        weighs the modeled sync cost of the counted schedule against the
+        static schedule's padded sweeps on this window's census
+        (``runtime/costmodel.CostModel.choose_schedule``).
+        """
+        metas = [self._meta(p) for p in prepped]
+        schedule = self.schedule
+        if schedule == "auto":
+            schedule = self.cost_model.choose_schedule(metas)
+        plan = planlib.build_plan(metas, schedule)
 
         mc_futs, diam_futs, fused_futs, aux = [], [], [], []
         t_prune = 0.0
@@ -708,6 +826,10 @@ class PlanExecutor:
         d_out = self._drain(window.diam_futs, "pass2b")
         if window.static_aux:
             self._resolve_static_aux(window, d_out)
+        if any(p.n_fut is not None for p in prepped):
+            # hint prep: drain the deferred counts, retry overflow cases
+            # (AFTER the static aux so a retried row wins over both)
+            self._resolve_hint_counts(window, d_out)
 
         rows = []
         for i, p in enumerate(prepped):
@@ -761,7 +883,8 @@ class PlanExecutor:
             data_parallel=psharding.axis_size(self.mesh, self.data_axis),
             two_pass=self.prune,
             device_compact=self.prune and self.device_compact,
-            schedule=self.schedule,
+            schedule=self.schedule,  # 'auto' here; plan.schedule = resolved
+            prep=self.prep,
             host_fetches={
                 k: v - fetches0.get(k, 0)
                 for k, v in self.transfer_log.items()
@@ -770,7 +893,7 @@ class PlanExecutor:
         )
         return results, stats
 
-    def extract_stream(self, cases: Iterable, window: int = 32,
+    def extract_stream(self, cases: Iterable, window: int | str = 32,
                        batch_size: int | None = None, stats_callback=None):
         """Streaming front-end: overlap window k+1's prep with window k.
 
@@ -780,9 +903,21 @@ class PlanExecutor:
         dispatch is async); only then is window k drained and yielded.
         ``stats_callback(window_index, plan_stats)`` fires at each
         window's submit with its plan census (buckets, pad waste).
+
+        ``window='auto'`` sizes the windows adaptively from the running
+        bucket census and the cost model (``runtime/costmodel``): a new
+        shape/cap bucket closes a window early once its current
+        sub-batches are all past break-even depth, and homogeneous runs
+        extend up to the memory-budgeted cap -- bit-identical rows to any
+        fixed window (windowing never changes a feature, tier-1-locked).
         """
-        if window < 1:
-            raise ValueError(f"window must be >= 1, got {window}")
+        if window == "auto":
+            yield from self._stream_auto(cases, batch_size, stats_callback)
+            return
+        if not isinstance(window, int) or window < 1:
+            raise ValueError(
+                f"window must be a positive int or 'auto', got {window!r}"
+            )
         it = iter(cases)
         pending = None
         widx = 0
@@ -801,14 +936,58 @@ class PlanExecutor:
                 return
             pending = state
 
+    def _stream_auto(self, cases: Iterable, batch_size=None,
+                     stats_callback=None):
+        """Adaptive-window streaming: cost-model-decided window boundaries.
+
+        Cases are prepped one by one (prep is per-case work regardless of
+        windowing) into an open buffer whose bucket census
+        (``plan.WindowCensus``) feeds the close-early decision
+        (``CostModel.should_close``).  Submit/collect overlap is the same
+        as the fixed-window path: the closed window is submitted BEFORE
+        the previous one is drained.
+        """
+        cm = self.cost_model
+        pending = None
+        widx = 0
+        buf: list = []
+        census = planlib.WindowCensus()
+        for case in cases:
+            p = self._prep_case(*case, fields=self.prune)
+            meta = self._meta(p)
+            if buf and cm.should_close(census, meta):
+                state = self.submit_prepped(buf, batch_size)
+                if stats_callback is not None:
+                    stats_callback(widx, state.plan.stats())
+                widx += 1
+                buf, census = [], planlib.WindowCensus()
+                if pending is not None:
+                    rows, _ = self.collect_window(pending)
+                    yield from rows
+                pending = state
+            buf.append(p)
+            census.add(meta)
+        if buf:
+            state = self.submit_prepped(buf, batch_size)
+            if stats_callback is not None:
+                stats_callback(widx, state.plan.stats())
+            if pending is not None:
+                rows, _ = self.collect_window(pending)
+                yield from rows
+            pending = state
+        if pending is not None:
+            rows, _ = self.collect_window(pending)
+            yield from rows
+
     def extract_one(self, image, mask, spacing):
         """Single-case pruned path: the batched pipeline's parity oracle.
 
         Runs the identical stages (same bucket padding, pruning, tuned
         configs, kernels) without any batching; returns a (7,) row.  An
-        empty mask yields zeros, matching the batched contract.
+        empty mask yields zeros, matching the batched contract.  Always
+        count-sized: the oracle is the baseline the hint prep must match.
         """
-        p = self._prep_case(image, mask, spacing)
+        p = self._prep_case(image, mask, spacing, prep="count")
         if p.mask is None:
             return np.zeros(self.N_FEATURES, np.float32)
         if self.prune:

@@ -46,7 +46,19 @@ Schedules (``schedule=``):
   (``plan.static_bucket``), so the two schedules are bit-identical
   (tier-1-locked) -- static trades padded pair-sweep work (cap//2 vs
   the tight bucket) for zero pass-1 syncs, the right trade for
-  streaming and for high-latency links (measured numbers in ROADMAP).
+  streaming and for high-latency links (measured numbers in ROADMAP);
+* ``'auto'``: resolved per window by the cost model
+  (``runtime/costmodel``) from the calibrated ``sync/<backend>`` d2h
+  probe and the window's bucket census -- counted on a zero-latency
+  local device, static when the modeled sync cost outweighs the
+  padding (either way bit-identical, since the schedules are).
+
+Prep (``prep=``): ``'count'`` (default) fetches each case's dedup vertex
+count to size its M cap -- one ``int(n)`` host sync per case;
+``'hint'`` sizes caps from ``plan.vertex_hint`` metadata alone (pass 0
+becomes sync-free; the true count rides to the collector on device, and
+a hint-overflow case re-runs count-sized at collect time).  Bit-identical
+to ``'count'``, tier-1-locked.
 
 Front-ends:
 
@@ -89,7 +101,10 @@ class BatchedExtractor:
     1's survivor compaction on device; ``device_compact=False`` selects
     the PR 2 host-side compaction -- bit-identical features, kept as the
     parity baseline.  ``schedule='static'`` removes the pass-1 count
-    sync (bit-identical to ``'counted'``, tier-1-locked).
+    sync (bit-identical to ``'counted'``, tier-1-locked);
+    ``schedule='auto'`` lets the cost model pick per window.
+    ``prep='hint'`` removes the last per-case pass-0 sync (hint-sized
+    caps, overflow retried at collect; bit-identical to ``'count'``).
     ``variant='auto'`` / ``mc_block='auto'`` / ``compact_block='auto'``
     resolve the measured-best kernel configurations per (bucket,
     batch-depth) from the autotune cache.  ``mesh`` defaults to the
@@ -103,12 +118,12 @@ class BatchedExtractor:
                  mc_block="auto", mc_chunk: int | None = None,
                  k_dirs: int = 16, device_compact: bool = True,
                  compact_block="auto", schedule: str = "counted",
-                 transfer_callback=None):
+                 prep: str = "count", transfer_callback=None):
         self.executor = PlanExecutor(
             backend=backend, variant=variant, mesh=mesh, data_axis=data_axis,
             prune=prune, mc_block=mc_block, mc_chunk=mc_chunk, k_dirs=k_dirs,
             device_compact=device_compact, compact_block=compact_block,
-            schedule=schedule, transfer_callback=transfer_callback,
+            schedule=schedule, prep=prep, transfer_callback=transfer_callback,
         )
         ex = self.executor
         self.backend = ex.backend
@@ -118,6 +133,12 @@ class BatchedExtractor:
         self.prune = ex.prune
         self.device_compact = ex.device_compact
         self.schedule = ex.schedule
+        self.prep = ex.prep
+
+    @property
+    def cost_model(self):
+        """The executor's decision layer (``runtime/costmodel.CostModel``)."""
+        return self.executor.cost_model
 
     def run(self, cases: Sequence, batch_size: int | None = None):
         """Extract features for (image, mask, spacing) cases (one window).
@@ -130,7 +151,7 @@ class BatchedExtractor:
         """Alias of :meth:`run`: one window of the streaming machinery."""
         return self.run(cases, batch_size)
 
-    def extract_stream(self, cases: Iterable, window: int = 32,
+    def extract_stream(self, cases: Iterable, window: int | str = 32,
                        batch_size: int | None = None, stats_callback=None):
         """Stream (image, mask, spacing) cases; yield rows in input order.
 
@@ -138,6 +159,9 @@ class BatchedExtractor:
         device execution of window k; ``stats_callback(i, plan_stats)``
         reports each window's plan census (buckets, pad waste) at submit
         time.  ``run`` is one window of this machinery.
+        ``window='auto'`` sizes windows adaptively from the running
+        bucket census and the cost model (bit-identical rows to any
+        fixed window).
         """
         return self.executor.extract_stream(
             cases, window=window, batch_size=batch_size,

@@ -229,6 +229,54 @@ class ExtractionPlan:
         }
 
 
+def meta_bytes(meta: CaseMeta) -> int:
+    """Device footprint of one planned case: staged mask + vertex stacks.
+
+    f32 mask at the padded shape bucket, plus the (cap, 3) vertex
+    coordinates and the (cap,) validity mask -- the arrays pass 0 stages
+    and pass 1 consumes.  Metadata-only, so the streaming window budget
+    (``runtime/costmodel``) can be enforced before anything is staged.
+    """
+    if meta.empty:
+        return 0
+    return 4 * math.prod(meta.shape) + 16 * meta.vertex_cap
+
+
+@dataclasses.dataclass
+class WindowCensus:
+    """Incremental bucket census of an OPEN streaming window.
+
+    The per-window :meth:`ExtractionPlan.stats` census is retrospective;
+    this is its running counterpart, updated case by case as the adaptive
+    window (``extract_stream(window='auto')``) grows, so the close-early
+    decision (``runtime/costmodel.CostModel.should_close``) reads group
+    depths and the memory footprint in O(1) per case.  Metadata only --
+    a census never touches a device array.
+    """
+
+    shape_depths: dict = dataclasses.field(default_factory=dict)
+    cap_depths: dict = dataclasses.field(default_factory=dict)
+    cases: int = 0
+    bytes: int = 0
+
+    def add(self, meta: CaseMeta) -> None:
+        self.cases += 1
+        self.bytes += meta_bytes(meta)
+        if meta.empty:
+            return  # empty cases join no pass group (build_plan drops them)
+        self.shape_depths[meta.shape] = self.shape_depths.get(meta.shape, 0) + 1
+        self.cap_depths[meta.vertex_cap] = (
+            self.cap_depths.get(meta.vertex_cap, 0) + 1
+        )
+
+    def fragments(self, meta: CaseMeta) -> bool:
+        """Would admitting ``meta`` open a NEW shape or cap sub-batch?"""
+        if meta.empty:
+            return False
+        return (meta.shape not in self.shape_depths
+                or meta.vertex_cap not in self.cap_depths)
+
+
 SCHEDULES = ("counted", "static")
 
 

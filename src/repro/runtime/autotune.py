@@ -14,9 +14,12 @@ bound autotuner.
 
 Cache schema (versioned): one JSON object ``{"schema": 3, "entries": {...}}``
 with entries keyed ``"diameter/<backend>/M<bucket>/B<depth>"``,
-``"mc/<backend>/S<nx>x<ny>x<nz>/B<depth>"``, and
+``"mc/<backend>/S<nx>x<ny>x<nz>/B<depth>"``,
 ``"compact/<backend>/M<bucket>/B<depth>"`` (the segmented-compaction
-scatter block).  ``B<depth>`` is the power-of-two *batch-depth bucket*
+scatter block), and ``"sync/<backend>"`` (the measured device->host
+fetch latency -- the quantity the counted-vs-static schedule decision
+of ``runtime/costmodel`` turns on; probed once per backend, not per
+bucket, since a (B, 2) count fetch is latency- not bandwidth-bound).  ``B<depth>`` is the power-of-two *batch-depth bucket*
 (:func:`batch_bucket`): under ``lax.map`` / the batched pipeline the best
 (variant, block) / (brick, chunk) can shift with how many cases a launch
 carries, so the winning configuration is cached per (bucket, depth) pair
@@ -658,3 +661,87 @@ def get_compact_config(
         },
     )
     return best
+
+
+# ---------------------------------------------------------------------------
+# device->host sync-cost probe
+# ---------------------------------------------------------------------------
+
+# fallback per-fetch d2h latency (us) when probing is disallowed: roughly a
+# local PCIe/ICI round-trip -- deliberately modest, so the auto schedule
+# only abandons the counted default on a MEASURED expensive link
+DEFAULT_SYNC_US = 150.0
+
+SYNC_PROBE_SHAPE = (32, 2)  # the (B, 2) count matrix pass 1 actually fetches
+
+
+def sync_key(backend: str) -> str:
+    return f"sync/{backend}"
+
+
+def measure_sync_cost(*, repeat: int = 64, warmup: int = 8) -> float:
+    """Best-of-``repeat`` wall-clock seconds for one small d2h fetch.
+
+    The probe materialises an already-ready (32, 2) int32 device array to
+    host numpy -- the exact shape of the counted schedule's pass-1 count
+    fetch -- so what is measured is the per-sync LATENCY (dispatch-queue
+    flush + transfer round-trip), not bandwidth.  ``block_until_ready``
+    before timing keeps device compute out of the measurement.
+    """
+    x = jax.block_until_ready(jax.numpy.zeros(SYNC_PROBE_SHAPE, jax.numpy.int32))
+    for _ in range(warmup):
+        np.asarray(x)
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        np.asarray(x)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _sync_probe_allowed(backend: str) -> bool:
+    # same policy shape as _sweep_allowed, but the d2h probe is meaningful
+    # on any REAL device (it measures the link, not a kernel), so only the
+    # interpret/ref-on-CI determinism concern gates it by default
+    flag = os.environ.get("REPRO_AUTOTUNE")
+    if flag == "0":
+        return False
+    if flag == "1":
+        return True
+    return backend == "pallas"
+
+
+def get_sync_cost(
+    backend: str,
+    *,
+    cache: AutotuneCache | None = None,
+    repeat: int = 64,
+) -> float:
+    """Cached-or-probed per-fetch d2h latency in MICROSECONDS.
+
+    Same contract as the config getters: cache hit -> no probe runs; a
+    miss probes when allowed and persists the measurement under
+    ``sync/<backend>``; disallowed probes return :data:`DEFAULT_SYNC_US`
+    uncached (so a later real-hardware run can still measure).  Unlike
+    the kernel sweeps this consults the cache for EVERY backend,
+    including 'ref': the sync cost belongs to the device link, not to a
+    kernel configuration, and the cost model must honour a calibrated
+    (or operator-pinned) entry regardless of which kernels run.
+    """
+    cache = cache or AutotuneCache()
+    hit = cache.get(sync_key(backend))
+    if hit is not None:
+        try:
+            us = float(hit["us"])
+        except (KeyError, TypeError, ValueError):
+            us = None
+        if us is not None and us > 0:
+            return us
+    if not _sync_probe_allowed(backend):
+        return DEFAULT_SYNC_US
+    t = measure_sync_cost(repeat=repeat)
+    cache.put(
+        sync_key(backend),
+        {"us": t * 1e6, "probed_at": time.strftime("%Y-%m-%dT%H:%M:%S")},
+    )
+    return t * 1e6

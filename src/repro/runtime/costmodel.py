@@ -1,0 +1,260 @@
+"""Cost model: measured autotune tables + plan censuses -> scheduling decisions.
+
+Four PRs built the *mechanisms* of the batched pipeline -- pruned two-pass
+execution, device-resident compaction, the sync-free static schedule, the
+streaming front-end -- but left their *selection* to hand-chosen knobs
+(``schedule=``, ``window=``, count- vs hint-sized prep).  The paper's
+claim is transparent acceleration "in all scenarios", which means the
+pipeline must pick its own execution strategy: this module is that
+component.  It is fed by exactly two information sources, both already
+persisted:
+
+* the **v3 autotune cache** (``runtime/autotune``): measured per-bucket,
+  per-batch-depth kernel timings (the ``us`` field of every
+  ``diameter/<backend>/M<bucket>/B<depth>`` record) plus the new
+  ``sync/<backend>`` d2h-latency probe;
+* the **plan layer's census** (``core/plan``): per-case metadata --
+  shape buckets, vertex caps, hint counts, pad-waste fractions -- that
+  exists BEFORE any device work runs.
+
+Decisions served (wired through ``core/executor``):
+
+``choose_schedule(metas)``
+    Counted vs static per window.  The counted schedule pays one d2h
+    sync per cap group but sweeps each case at its tight M' bucket; the
+    static schedule is sync-free but sweeps at the cap's aligned
+    power-of-two target (``plan.static_bucket``).  The model compares
+    ``n_groups * sync_us + tight-sweep cost`` against the padded-sweep
+    cost; on a zero-latency local device counted wins (the measured PR 4
+    trade-off), on a high-latency link (a large calibrated
+    ``sync/<backend>`` entry) static wins.
+
+``should_close(census, meta)``
+    Adaptive streaming windows (``extract_stream(window='auto')``).
+    Close the open window early when the incoming case introduces a new
+    shape/cap bucket while every current sub-batch already sits at or
+    past its break-even depth (a fresh singleton bucket would only
+    fragment a healthy window); extend homogeneous runs until the
+    memory-budgeted cap (``REPRO_STREAM_MEM_MB``, default 512 MiB of
+    staged masks + vertex stacks) or the absolute case cap.
+
+``break_even_depth(cap)``
+    The smallest power-of-two sub-batch depth whose measured per-case
+    cost is within :data:`BREAK_EVEN_SLACK` of the best measured depth
+    for that bucket -- read straight off the v3 depth-keyed tables.
+    With fewer than two measured depths (fresh cache, 'ref' backend) the
+    conservative :data:`DEFAULT_BREAK_EVEN_DEPTH` applies.
+
+Determinism contract (tier-1-locked): every decision is a pure function
+of (backend, cache file contents, plan metadata) -- with sweeps/probes
+disabled (``REPRO_AUTOTUNE=0``) the model never measures, never writes,
+and returns identical answers for identical inputs, which is what makes
+an auto-configured run reproducible from its committed cache.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.core import plan as planlib
+from repro.runtime import autotune
+
+# analytic fallback for an unmeasured diameter bucket: the pair sweep is
+# O(cap^2), anchored at ~PAIR_SWEEP_US per (1024)^2-pair launch (the order
+# of the measured CPU-ref numbers in BENCH_diameter.json).  Only RATIOS
+# between bucket sizes matter to the decisions, not the absolute scale.
+PAIR_SWEEP_US = 200.0
+
+# fraction of pre-prune vertices assumed to survive the exact bound when no
+# count exists yet (the autotune compact probe uses the same ~25% figure)
+ASSUMED_KEEP_FRACTION = 0.25
+
+# a sub-batch depth is "past break-even" when its measured per-case cost is
+# within this factor of the best measured depth for the bucket
+BREAK_EVEN_SLACK = 1.25
+DEFAULT_BREAK_EVEN_DEPTH = 4
+MAX_PROBED_DEPTH = 64
+
+DEFAULT_WINDOW_MEM_MB = 512.0
+DEFAULT_WINDOW_MAX_CASES = 256
+
+
+def _env_float(name: str, default: float) -> float:
+    try:
+        return float(os.environ.get(name, ""))
+    except ValueError:
+        return default
+
+
+class CostModel:
+    """Backend-calibrated decision layer over the autotune cache.
+
+    One instance per executor; lookups are memoised per instance (the
+    cache file is re-read at most once per distinct query), so a
+    streaming run of thousands of windows costs no repeated JSON I/O.
+    """
+
+    def __init__(self, backend: str, cache: autotune.AutotuneCache | None = None,
+                 *, assumed_keep: float = ASSUMED_KEEP_FRACTION,
+                 break_even_default: int = DEFAULT_BREAK_EVEN_DEPTH,
+                 window_mem_bytes: float | None = None,
+                 window_max_cases: int | None = None):
+        self.backend = backend
+        self.cache = cache or autotune.AutotuneCache()
+        self.assumed_keep = assumed_keep
+        self.break_even_default = break_even_default
+        if window_mem_bytes is None:
+            window_mem_bytes = (
+                _env_float("REPRO_STREAM_MEM_MB", DEFAULT_WINDOW_MEM_MB) * 2**20
+            )
+        self.window_mem_bytes = float(window_mem_bytes)
+        if window_max_cases is None:
+            window_max_cases = int(
+                _env_float("REPRO_STREAM_MAX_CASES", DEFAULT_WINDOW_MAX_CASES)
+            )
+        self.window_max_cases = int(window_max_cases)
+        self._sync_us: float | None = None
+        self._diam_us: dict = {}
+        self._break_even: dict = {}
+
+    # -- measured lookups ---------------------------------------------------
+
+    def sync_cost_us(self) -> float:
+        """Per-fetch d2h latency: the calibrated ``sync/<backend>`` entry."""
+        if self._sync_us is None:
+            from repro.core import dispatcher  # local import: avoid cycle
+
+            self._sync_us = dispatcher.sync_cost(self.backend, cache=self.cache)
+        return self._sync_us
+
+    def _measured_us(self, key: str) -> float | None:
+        hit = self.cache.get(key)
+        if hit is None:
+            return None
+        try:
+            us = float(hit["us"])
+        except (KeyError, TypeError, ValueError):
+            return None
+        return us if us > 0 else None
+
+    def diameter_case_us(self, cap: int, depth: int = 1) -> float:
+        """Modeled PER-CASE pair-sweep cost at a (bucket, depth) pair.
+
+        A measured ``diameter/<backend>/M<cap>/B<depth>`` entry wins (its
+        ``us`` is the whole launch: divide by the depth bucket); the
+        nearest shallower measured depth is consulted next, and an
+        unmeasured bucket falls back to the analytic O(cap^2) estimate.
+        """
+        cap = int(cap)
+        d = autotune.batch_bucket(max(1, depth))
+        memo = (cap, d)
+        if memo in self._diam_us:
+            return self._diam_us[memo]
+        out = None
+        probe = d
+        while probe >= 1:  # nearest shallower measured depth
+            us = self._measured_us(autotune.sweep_key(cap, self.backend, probe))
+            if us is not None:
+                out = us / probe
+                break
+            probe //= 2
+        if out is None:
+            out = (cap / 1024.0) ** 2 * PAIR_SWEEP_US
+        self._diam_us[memo] = out
+        return out
+
+    def break_even_depth(self, cap: int) -> int:
+        """Smallest measured depth within BREAK_EVEN_SLACK of the best.
+
+        Reads the depth ladder ``.../B1, .../B2, ...`` of the bucket's
+        diameter entries; fewer than two measured depths mean the ladder
+        cannot be ranked and the conservative default applies.
+        """
+        cap = int(cap)
+        if cap in self._break_even:
+            return self._break_even[cap]
+        per_case = {}
+        d = 1
+        while d <= MAX_PROBED_DEPTH:
+            us = self._measured_us(autotune.sweep_key(cap, self.backend, d))
+            if us is not None:
+                per_case[d] = us / d
+            d *= 2
+        if len(per_case) < 2:
+            out = self.break_even_default
+        else:
+            best = min(per_case.values())
+            out = next(
+                d for d in sorted(per_case)
+                if per_case[d] <= BREAK_EVEN_SLACK * best
+            )
+        self._break_even[cap] = out
+        return out
+
+    # -- decision: counted vs static schedule --------------------------------
+
+    def choose_schedule(self, metas) -> str:
+        """Pick the pass-2b schedule for one window of case metadata.
+
+        counted:  one sync per cap group + tight (estimated M') sweeps;
+        static:   zero syncs + padded sweeps at the aligned cap target.
+        The keep fraction is estimated (``assumed_keep``) because the
+        whole point of the decision is that no count has been fetched
+        yet.  Ties break toward counted, the zero-latency default.
+        """
+        sync_us = self.sync_cost_us()
+        groups: dict[int, list] = {}
+        for m in metas:
+            if not getattr(m, "empty", False) and m.vertex_cap:
+                groups.setdefault(int(m.vertex_cap), []).append(m)
+        if not groups:
+            return "counted"
+        counted = static = 0.0
+        for cap, group in groups.items():
+            depth = autotune.batch_bucket(len(group))
+            counted += sync_us  # the (B, 2) count fetch, one per cap group
+            target = planlib.static_bucket(cap) or cap
+            for m in group:
+                kept = max(2, int(m.n_vertices * self.assumed_keep))
+                tight = min(planlib.vertex_bucket(kept), cap)
+                counted += self.diameter_case_us(tight, depth)
+                static += self.diameter_case_us(target, depth)
+        return "counted" if counted <= static else "static"
+
+    # -- decision: adaptive stream windows -----------------------------------
+
+    def window_budget_cases(self, census: planlib.WindowCensus) -> int:
+        """Memory-budgeted case cap for the open window (>= 1)."""
+        if census.cases and census.bytes:
+            per_case = census.bytes / census.cases
+            return max(1, min(self.window_max_cases,
+                              int(self.window_mem_bytes // per_case)))
+        return self.window_max_cases
+
+    def should_close(self, census: planlib.WindowCensus,
+                     meta: planlib.CaseMeta) -> bool:
+        """Close the open window before admitting ``meta``?
+
+        True when the window hit its memory/case budget, or when ``meta``
+        introduces a new shape/cap bucket while every current sub-batch
+        already sits at or past its break-even depth -- a fresh singleton
+        bucket would fragment a window whose groups are all healthy,
+        whereas a still-shallow window keeps absorbing heterogeneity
+        (windows must be allowed to grow past one bucket at all).
+        """
+        if census.cases == 0:
+            return False
+        if census.cases >= self.window_budget_cases(census):
+            return True
+        if census.bytes + planlib.meta_bytes(meta) > self.window_mem_bytes:
+            return True
+        if not census.fragments(meta):
+            return False
+        depths = list(census.shape_depths.values()) + list(
+            census.cap_depths.values()
+        )
+        if not depths:  # only empty-mask cases so far: nothing to fragment
+            return False
+        break_even = max(self.break_even_depth(cap)
+                         for cap in census.cap_depths) if census.cap_depths \
+            else self.break_even_default
+        return min(depths) >= break_even

@@ -325,3 +325,64 @@ def test_extractor_mc_autotune_roundtrip(cache_path, monkeypatch):
     assert len(mc_sweeps) == n_mc and len(diam_sweeps) == n_d
     for k in f1:
         np.testing.assert_allclose(f1[k], f2[k], rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# sync/<backend> d2h-latency probe (the cost model's calibration entry)
+# ---------------------------------------------------------------------------
+
+
+def test_sync_probe_roundtrip_caches_once(cache_path, monkeypatch):
+    probes = []
+    orig = autotune.measure_sync_cost
+
+    def counting(**kw):
+        probes.append(kw)
+        return orig(repeat=4, warmup=1)
+
+    monkeypatch.setattr(autotune, "measure_sync_cost", counting)
+    us1 = autotune.get_sync_cost("interpret")
+    assert len(probes) == 1 and us1 > 0
+    # second resolution is a pure cache hit -- the probe is one-time
+    us2 = autotune.get_sync_cost("interpret")
+    assert len(probes) == 1 and us2 == us1
+    entry = autotune.AutotuneCache().get(autotune.sync_key("interpret"))
+    assert entry["us"] == us1 and "probed_at" in entry
+
+
+def test_sync_probe_disabled_returns_default_uncached(tmp_path, monkeypatch):
+    path = str(tmp_path / "no_probe.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE", "0")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    assert autotune.get_sync_cost("pallas") == autotune.DEFAULT_SYNC_US
+    assert not os.path.exists(path)
+
+
+def test_sync_entry_honoured_for_every_backend(cache_path, monkeypatch):
+    # a calibrated (or operator-pinned) entry wins even where kernel
+    # sweeps are disallowed: the sync cost belongs to the link
+    monkeypatch.setenv("REPRO_AUTOTUNE", "0")
+    autotune.AutotuneCache().put(autotune.sync_key("ref"), {"us": 123.5})
+    assert autotune.get_sync_cost("ref") == 123.5
+
+
+def test_malformed_sync_entry_falls_back(cache_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE", "0")
+    cache = autotune.AutotuneCache()
+    for bad in ({"us": "fast"}, {"us": -1.0}, {"probed_at": "x"}):
+        cache.put(autotune.sync_key("ref"), bad)
+        assert autotune.get_sync_cost("ref") == autotune.DEFAULT_SYNC_US
+
+
+def test_sync_entry_coexists_and_survives_migration(cache_path):
+    cache = autotune.AutotuneCache()
+    cache.put(autotune.sync_key("pallas"), {"us": 321.0})
+    cache.put(
+        autotune.sweep_key(512, "pallas", batch=2),
+        {"variant": "gram", "block": 128, "us": 9.0, "table": {}},
+    )
+    raw = json.load(open(cache_path))
+    assert raw["schema"] == autotune.SCHEMA_VERSION
+    assert set(raw["entries"]) == {"sync/pallas", "diameter/pallas/M512/B2"}
+    # _migrate_key must pass the 2-segment sync key through untouched
+    assert autotune._migrate_key("sync/pallas") == "sync/pallas"
