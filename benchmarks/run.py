@@ -6,6 +6,7 @@ One benchmark per paper table/figure (+ the roofline report):
     fig1     -- diameter kernel variant comparison  (paper Fig. 1)
     fig2     -- size scaling + projected speedup    (paper Fig. 2)
     pipeline -- batched multi-case throughput       (paper §3 workflow)
+    soak     -- faulted/preempted/resumed soak      (resilience gate)
     roofline -- dry-run roofline table              (EXPERIMENTS §Roofline)
 
 Prints ``name,us_per_call,derived`` CSV.  Select suites with --only.
@@ -24,7 +25,7 @@ import json
 import sys
 import time
 
-SUITES = ("table2", "fig1", "fig2", "pipeline", "roofline")
+SUITES = ("table2", "fig1", "fig2", "pipeline", "soak", "roofline")
 
 
 def _write_record(path: str, bench: str, suite: str, rows: list, ok: bool):
@@ -86,6 +87,11 @@ def main(argv=None):
                 from benchmarks import pipeline_throughput
                 rows = pipeline_throughput.run(records=pipeline_records)
                 pipeline_ok = True
+            elif suite == "soak":
+                # the resilience soak rides the pipeline trajectory record
+                # (its soak_resilience row is cases/sec like the others)
+                from benchmarks import soak
+                rows = soak.run(records=pipeline_records)
             else:
                 from benchmarks import roofline_report
                 rows = roofline_report.run()

@@ -1,0 +1,195 @@
+"""Resilience soak: faulted, preempted, resumed extraction at scale.
+
+The paper's cluster workload (~40 000 CT scans, xLUNGS) runs for hours on
+shared nodes; the question this soak answers is not "how fast" but "does
+a faulted, preempted, resumed run produce EXACTLY the same manifest as an
+uninterrupted one".  Three phases over the same synthetic case stream,
+with the same deterministic :class:`FaultPlan` (injected load errors,
+NaN-poisoned and emptied masks, a transient collect fault exercising the
+retry path, one artificial straggler window):
+
+  A. uninterrupted reference run -> manifest A;
+  B. the same run with a REAL SIGTERM landing mid-stream
+     (``preempt_at_case``) -> partial manifest B;
+  C. resume into manifest B with a fresh extractor -> completed B.
+
+Hard assertions (the soak FAILS the bench run if any break):
+
+  * zero lost and zero duplicated case ids (exactly one record per case);
+  * the resumed manifest's record set is bit-identical to manifest A's
+    (windows ordinals aside -- they restart on resume);
+  * at most ONE window of extraction work was redone
+    (``windows_B + windows_C <= windows_A + 1``);
+  * the injected transient collect fault was absorbed by the retry path;
+  * the sync-free submit invariants survived all of it (zero prep /
+    pass-1 fetches under ``static`` + ``hint``).
+
+``run(records=...)`` appends a ``soak_resilience`` row (throughput of the
+faulted uninterrupted run) to the ``BENCH_pipeline.json`` trajectory;
+``python -m benchmarks.soak --n 10000`` is the standalone large soak.
+
+    SOAK_CASES=200 python -m benchmarks.run --only pipeline soak \\
+        --json-pipeline BENCH_pipeline.json
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+import tempfile
+from pathlib import Path
+
+from benchmarks.common import row
+from repro.core.pipeline import BatchedExtractor
+from repro.data.synthetic import make_case
+from repro.runtime.resilience import (
+    FaultPlan,
+    ResilientRunner,
+    RetryPolicy,
+    RunManifest,
+)
+
+# small-to-medium KITS19-like dims: a few shape buckets, fast per case
+DIMS = ((20, 18, 16), (24, 20, 18), (22, 26, 14), (18, 16, 20))
+
+# the fault cocktail, identical (seeded) across all three phases
+FAULTS = dict(
+    seed=20260808,
+    load_error_rate=0.02,      # dead loaders -> quarantined by name
+    poison_nan_rate=0.02,      # poisoned masks -> row-level error records
+    poison_empty_rate=0.01,    # emptied masks -> the all-zero-row contract
+    fail_windows=(1,),         # one guaranteed transient collect fault
+    window_fault_rate=0.02,    # plus a seeded sprinkle of extra ones
+    straggle_windows=(3,),     # one artificial straggler for the census
+    straggle_seconds=0.25,
+)
+
+
+def _stream(n: int):
+    """Lazy (name, loader) case stream: nothing materialises up front."""
+    for i in range(n):
+        yield (
+            f"soak-{i:06d}",
+            functools.partial(make_case, DIMS[i % len(DIMS)], seed=1000 + i),
+        )
+
+
+def _runner(manifest: RunManifest, fp: FaultPlan, window: int,
+            drain_on_preempt: bool = True):
+    ext = BatchedExtractor(
+        backend="ref", schedule="static", prep="hint",
+        transfer_callback=fp.transfer_hook,
+        retry=RetryPolicy(max_retries=3, base_delay=0.01),
+    )
+    return ext, ResilientRunner(
+        ext, manifest, window=window, fault_plan=fp,
+        drain_on_preempt=drain_on_preempt,
+    )
+
+
+def _strip(rows):
+    # window ordinals restart on resume; everything else must match exactly
+    return sorted(
+        [{k: v for k, v in r.items() if k != "window"} for r in rows],
+        key=lambda r: r["id"],
+    )
+
+
+def run(n: int | None = None, window: int = 16, records=None, out=None):
+    if n is None:
+        n = int(os.environ.get("SOAK_CASES", "200"))
+    if n < 3 * window:
+        raise ValueError(f"soak needs n >= 3*window, got n={n} window={window}")
+    tmp = None
+    if out is None:
+        tmp = tempfile.TemporaryDirectory(prefix="repro_soak_")
+        out = tmp.name
+    out = Path(out)
+    try:
+        # A: uninterrupted faulted reference
+        man_a = RunManifest(out / "soak_a.jsonl")
+        ext_a, run_a = _runner(man_a, FaultPlan(**FAULTS), window)
+        rep_a = run_a.run(_stream(n))
+        man_a.close()
+        assert rep_a.status == "complete" and rep_a.processed == n
+        assert rep_a.quarantined > 0, "fault rates injected nothing"
+        assert rep_a.window_retries >= 1, "transient fault never exercised retry"
+
+        # B: same faults + a REAL SIGTERM mid-stream (grace-period drain)
+        man_b = RunManifest(out / "soak_b.jsonl")
+        _, run_b = _runner(
+            man_b, FaultPlan(**FAULTS, preempt_at_case=max(window + 1, n // 2)),
+            window,
+        )
+        rep_b = run_b.run(_stream(n))
+        man_b.close()
+        assert rep_b.status == "preempted"
+        assert 0 < rep_b.processed < n
+
+        # C: resume into the same manifest with a fresh extractor
+        man_c = RunManifest(out / "soak_b.jsonl")
+        ext_c, run_c = _runner(man_c, FaultPlan(**FAULTS), window)
+        rep_c = run_c.run(_stream(n))
+        assert rep_c.status == "complete"
+
+        # zero lost, zero duplicated ids; exactly one record per case
+        ids = [r["id"] for r in man_c.rows()]
+        assert len(ids) == n == len(set(ids)), \
+            f"lost/duplicated ids: {len(ids)} rows, {len(set(ids))} unique"
+        assert rep_b.processed + rep_c.processed == n
+
+        # at most ONE window of extraction work redone after the kill
+        redone = rep_b.windows + rep_c.windows - rep_a.windows
+        assert redone <= 1, f"{redone} extra windows redone after preemption"
+
+        # the resumed manifest is bit-identical to the uninterrupted one
+        assert _strip(man_c.rows()) == _strip(man_a.rows()), \
+            "resumed manifest diverged from the uninterrupted run"
+
+        # the sync-free submit invariants survived the whole cocktail
+        for ext in (ext_a, ext_c):
+            assert ext.executor.transfer_log["prep"] == 0
+            assert ext.executor.transfer_log["pass1"] == 0
+    finally:
+        if tmp is not None:
+            tmp.cleanup()
+
+    derived = dict(
+        cases=n,
+        cases_per_s=f"{rep_a.cases_per_second:.2f}",
+        quarantined=rep_a.quarantined,
+        window_retries=rep_a.window_retries + rep_b.window_retries
+        + rep_c.window_retries,
+        stragglers=len(rep_a.stragglers),
+        redone_windows=max(0, redone),
+        resumed_rows=rep_c.processed,
+    )
+    rows = [row("soak/resilience", rep_a.seconds / n * 1e6, **derived)]
+    if records is not None:
+        records.append({
+            "name": "soak_resilience",
+            "cases": n,
+            "seconds": rep_a.seconds,
+            "cases_per_second": rep_a.cases_per_second,
+            "quarantined": rep_a.quarantined,
+            "window_retries": derived["window_retries"],
+            "redone_windows": derived["redone_windows"],
+        })
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=10000,
+                    help="cases to soak (CI uses SOAK_CASES=200 via "
+                         "benchmarks.run)")
+    ap.add_argument("--window", type=int, default=16)
+    ap.add_argument("--out", default=None,
+                    help="keep the soak manifests here (default: tempdir)")
+    args = ap.parse_args(argv)
+    for r in run(n=args.n, window=args.window, out=args.out):
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

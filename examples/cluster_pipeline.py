@@ -1,54 +1,55 @@
-"""HPC radiomics pipeline: streaming extraction with restart, the xLUNGS story.
+"""HPC radiomics pipeline: resilient streaming extraction, the xLUNGS story.
 
 The paper's motivation is feature extraction over ~40 000 CT scans on a
 cluster.  This driver shows the production pattern for that job, built on
-the dataset-level streaming front-end (``extract_stream``):
+the resilience layer (``runtime/resilience``) over the streaming
+plan/executor pipeline:
 
   * cases flow through as an ITERATOR -- nothing materialises the whole
-    batch; host prep (load + crop + pad + bucket) of window k+1 overlaps
-    device execution of window k (the DMA/compute overlap the paper's
-    conclusion calls out);
-  * the pipeline configures ITSELF by default (the PR 5 cost-model
-    layer, ``runtime/costmodel``): ``--window auto`` closes windows at
-    census-decided bucket boundaries, ``--schedule auto`` picks counted
-    vs static per window from the calibrated ``sync/<backend>`` probe,
-    and ``--prep hint`` sizes vertex caps from metadata alone so the
-    submit path performs ZERO per-case host syncs -- all bit-identical
-    to the fixed knobs (tier-1-locked), which remain available for
-    pinning;
+    batch; the runner mirrors ``extract_stream``'s overlap (host prep of
+    window k+1 while the device executes window k);
+  * completed features land in a :class:`RunManifest` -- atomic
+    append-only JSONL keyed by a CONTENT hash of each mask+spacing, so a
+    killed job resumes where it left off even if cases were renamed or
+    reordered, redoing at most one window of work;
+  * a poisoned case (NaN mask, dead loader) quarantines as a row-level
+    ``error`` record instead of killing the run, and ``--retries`` turns
+    on backed-off re-submission of a window whose collect hits a
+    transient fault;
+  * SIGTERM (the cluster preemption notice) is caught by the runner's
+    :class:`PreemptionHandler`: the in-flight window drains and commits,
+    the open buffer is abandoned, and the next invocation resumes;
   * every window's plan census (shape/cap buckets, pad waste, resolved
-    schedule) prints at submit time, the telemetry a cluster operator
-    watches for bucket explosion on heterogeneous cohorts;
-  * completed features are checkpointed to a JSONL manifest as each
-    window drains, so a killed job resumes where it left off (cluster
-    preemption safety) -- at most one window of work is ever redone.
+    schedule, straggler flag) prints as it drains -- the telemetry a
+    cluster operator watches for bucket explosion on heterogeneous
+    cohorts;
+  * the executor still configures itself (the PR 5 cost-model layer):
+    ``--schedule auto`` picks counted vs static per window and
+    ``--prep hint`` keeps the submit path free of per-case host syncs --
+    all bit-identical to the fixed knobs (tier-1-locked).
 
     PYTHONPATH=src python examples/cluster_pipeline.py --cases 24
     PYTHONPATH=src python examples/cluster_pipeline.py --cases 24 \\
-        --window 8 --schedule static --prep count   # pin every knob
+        --window 8 --schedule static --prep count --retries 2  # pin knobs
 """
 import argparse
-import json
-from pathlib import Path
 
 from repro.core.pipeline import BatchedExtractor
 from repro.data.synthetic import stream_cases
-
-FEATURE_NAMES = ("MeshVolume", "SurfaceArea", "Maximum3DDiameter",
-                 "Maximum2DDiameterSlice", "Maximum2DDiameterRow",
-                 "Maximum2DDiameterColumn", "n_vertices")
-
-
-def _window(value: str):
-    return value if value == "auto" else int(value)
+from repro.runtime.resilience import (
+    FEATURE_NAMES,  # noqa: F401  (re-export kept for downstream scripts)
+    ResilientRunner,
+    RetryPolicy,
+    RunManifest,
+)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--cases", type=int, default=16)
-    ap.add_argument("--window", type=_window, default="auto",
-                    help="cases per stream window, or 'auto' for "
-                         "census-decided adaptive boundaries")
+    ap.add_argument("--window", type=int, default=8,
+                    help="cases per stream window (a kill redoes at most "
+                         "one of these)")
     ap.add_argument("--out", default="/tmp/repro_pipeline/features.jsonl")
     ap.add_argument("--variant", default="seqacc")
     ap.add_argument("--schedule", default="auto",
@@ -58,56 +59,51 @@ def main():
     ap.add_argument("--prep", default="hint", choices=("hint", "count"),
                     help="pass-0 cap sizing (hint: metadata-only, "
                          "sync-free; count: per-case measured)")
+    ap.add_argument("--retries", type=int, default=2,
+                    help="per-window collect retries (0 disables)")
     args = ap.parse_args()
 
-    out = Path(args.out)
-    out.parent.mkdir(parents=True, exist_ok=True)
-    done = set()
-    if out.exists():  # restart: skip already-extracted cases
-        done = {json.loads(l)["case"] for l in out.read_text().splitlines()}
-        print(f"resuming: {len(done)} cases already extracted")
-
-    # synthetic KITS19-like workload, streamed lazily (never a full batch)
-    names = []
-
-    def cases():
-        for name, img, msk, sp in stream_cases(args.cases, skip=done):
-            names.append(name)
-            yield img, msk, sp
-
-    def window_stats(i, s):
-        print(f"window {i}: {s['cases']} cases, "
+    def census(widx, s):
+        print(f"window {widx}: {s['cases']} cases, "
               f"{s['shape_buckets']} shape buckets, "
               f"{s['cap_buckets']} vertex buckets, "
               f"pad waste mask {s['mask_pad_waste']:.0%} / "
               f"verts {s['vertex_pad_waste']:.0%}, "
-              f"schedule={s['schedule']}")  # the cost model's per-window pick
+              f"schedule={s['schedule']}, {s['seconds']:.2f}s"
+              + (", QUARANTINED={}".format(s["quarantined"])
+                 if s.get("quarantined") else "")
+              + (", STRAGGLER" if s.get("straggler") else ""))
 
     ext = BatchedExtractor(  # mesh=None: single device
-        variant=args.variant, schedule=args.schedule, prep=args.prep
+        variant=args.variant, schedule=args.schedule, prep=args.prep,
+        retry=RetryPolicy(max_retries=args.retries) if args.retries else None,
     )
-    n_done = 0
-    import time
-    t0 = time.perf_counter()
-    with out.open("a") as f:
-        for feat in ext.extract_stream(cases(), window=args.window,
-                                       stats_callback=window_stats):
-            rec = {"case": names[n_done]}
-            rec.update({k: float(v) for k, v in zip(FEATURE_NAMES, feat)})
-            f.write(json.dumps(rec) + "\n")
-            f.flush()  # checkpoint per row: preemption loses < one window
-            n_done += 1
-    dt = time.perf_counter() - t0
-    if n_done == 0:
-        print("nothing to do")
+    manifest = RunManifest(args.out)
+    already = len(manifest.resume())
+    if already:
+        print(f"resuming: {already} cases already in the manifest")
+
+    runner = ResilientRunner(ext, manifest, window=args.window,
+                             stats_callback=census)
+    # stream (name, image, mask, spacing); the runner skips done cases
+    # by CONTENT id, so renames/reorders of the input cannot double-run
+    rep = runner.run(stream_cases(args.cases))
+    manifest.close()
+
+    if rep.processed == 0 and rep.status == "complete":
+        print(f"nothing to do ({rep.skipped} cases already extracted)")
         return
     log = ext.executor.transfer_log
-    print(f"extracted {n_done} cases in {dt:.1f}s "
-          f"({n_done / dt:.2f} cases/s, schedule={args.schedule}, "
-          f"prep={args.prep}, window={args.window}, "
+    print(f"{rep.status}: {rep.processed} rows in {rep.seconds:.1f}s "
+          f"({rep.cases_per_second:.2f} cases/s, {rep.windows} windows, "
+          f"skipped {rep.skipped} done, quarantined {rep.quarantined}, "
+          f"window retries {rep.window_retries}, "
+          f"stragglers {len(rep.stragglers)}; "
           f"per-case host syncs: pass0={log.get('prep', 0)} "
           f"pass1={log.get('pass1', 0)})")
-    print(f"manifest: {out}")
+    print(f"manifest: {manifest.path}")
+    if rep.status == "preempted":
+        print("preempted -- re-run the same command to resume")
 
 
 if __name__ == "__main__":

@@ -46,17 +46,27 @@ stage schedule python -m pytest -q -m tier1 \
     tests/test_plan_executor_stream.py \
     tests/test_costmodel_schedule.py
 
+# 4) resilience gates: manifest resume/torn-tail repair, quarantine
+#    row-level errors, window retry bit-identity, checkpoint torn-write
+#    fallback, and the kill/resume acceptance test (preempted+resumed
+#    manifest == uninterrupted, at most one window redone)
+stage resilience python -m pytest -q -m tier1 \
+    tests/test_resilience.py \
+    tests/test_checkpoint.py
+
 if [[ "${SMOKE_SKIP_BENCH:-0}" != "1" ]]; then
-  # 4) kernel-wiring smoke: Fig.1 variant sweep (interpret mode) + the
+  # 5) kernel-wiring smoke: Fig.1 variant sweep (interpret mode) + the
   #    BENCH_diameter.json perf-trajectory record
   stage bench_diameter python -m benchmarks.run --only fig1 --json BENCH_diameter.json
   test -s BENCH_diameter.json
 
-  # 5) batched-throughput smoke: the pipeline mode ladder (single loop ->
-  #    streaming auto), recorded as the BENCH_pipeline.json trajectory,
-  #    then gated against the committed trajectory (>30% cases/s or
-  #    us/call regression on any named row fails)
-  stage bench_pipeline python -m benchmarks.run --only pipeline --json-pipeline BENCH_pipeline.json
+  # 6) batched-throughput smoke: the pipeline mode ladder (single loop ->
+  #    streaming auto) plus the ~200-case faulted/preempted/resumed soak
+  #    (SOAK_CASES), recorded as the BENCH_pipeline.json trajectory, then
+  #    gated against the committed trajectory (>30% cases/s or us/call
+  #    regression on any named row fails)
+  stage bench_pipeline env SOAK_CASES="${SOAK_CASES:-200}" \
+      python -m benchmarks.run --only pipeline soak --json-pipeline BENCH_pipeline.json
   test -s BENCH_pipeline.json
   stage bench_gate python scripts/check_bench.py \
       --pipeline BENCH_pipeline.json --diameter BENCH_diameter.json

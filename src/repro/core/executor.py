@@ -56,6 +56,14 @@ window's census; ``extract_stream(window='auto')`` closes windows at
 census-decided boundaries.  ``prep='count'`` and fixed windows remain
 the parity baselines, and every auto knob is bit-identical to them
 (tier-1-locked).
+
+Resilience (PR 6, ``runtime/resilience``): cases may be lazy loader
+callables; any load/validation failure (incl. NaN-poisoned masks)
+quarantines the case as an all-NaN row plus a window-stats error record
+instead of killing the window (``_prep_case_safe``), and a ``retry``
+policy turns a collect-time fault into a backed-off ``resubmit_window``
++ re-drain -- both pure host-side mechanisms that leave the sync-free
+submit path's zero-fetch invariants untouched.
 """
 from __future__ import annotations
 
@@ -102,6 +110,7 @@ class _Prepped:
     n_fut: object | None = None  # hint prep: true dedup count, ON DEVICE
     prep_cap: int = 0  # hint prep: the pass-0 compaction cap (overflow ref;
     # vertex_cap is overwritten by pass 1 with the pass-2b bucket)
+    error: str | None = None  # quarantined case: the row degrades to NaNs
 
 
 @dataclasses.dataclass
@@ -164,7 +173,7 @@ class PlanExecutor:
                  k_dirs: int = 16, device_compact: bool = True,
                  compact_block="auto", schedule: str = "counted",
                  prep: str = "count", cost_model=None,
-                 transfer_callback=None):
+                 transfer_callback=None, retry=None):
         self.backend = dispatcher.resolve_backend(backend)
         self.variant = variant
         if mesh is None:
@@ -204,6 +213,8 @@ class PlanExecutor:
         self._cost_model = cost_model
         self.transfer_log = collections.Counter()
         self._transfer_cb = transfer_callback
+        self.retry = retry  # runtime/resilience.RetryPolicy (duck-typed)
+        self.window_retries = 0  # collect retries performed (resilience census)
         self._compiled = {}
 
     @property
@@ -541,6 +552,38 @@ class PlanExecutor:
             verts=verts, vmask=vmask, n_vertices=n, vertex_cap=cap,
         )
 
+    def _prep_case_safe(self, case, fields: bool = True,
+                        prep: str | None = None) -> _Prepped:
+        """Quarantining wrapper around :meth:`_prep_case` (pass 0).
+
+        ``case`` is an ``(image, mask, spacing)`` tuple or a zero-arg
+        callable returning one (a lazy loader, so load failures are
+        attributable to the case that raised them).  Any exception --
+        loader I/O errors, non-finite (poisoned) masks or spacings, crop
+        failures -- degrades to a QUARANTINED prepped case: its feature
+        row is all-NaN, its error message rides the window stats, and the
+        rest of the window is untouched.  A 40k-case sweep must not die
+        on one poisoned segmentation (the row-level-error contract,
+        tier-1-locked).  Validation and quarantine are pure host work:
+        the sync-free submit path's zero-fetch invariants are untouched.
+        """
+        try:
+            if callable(case):
+                case = case()
+            image, mask, spacing = case
+            m = np.asarray(mask)
+            if np.issubdtype(m.dtype, np.floating) and not np.isfinite(m).all():
+                raise ValueError("non-finite mask (poisoned case)")
+            sp = np.asarray(spacing, np.float64)
+            if sp.shape != (3,) or not np.isfinite(sp).all() or (sp <= 0).any():
+                raise ValueError(f"invalid spacing {spacing!r}")
+            return self._prep_case(image, mask, spacing, fields=fields,
+                                   prep=prep)
+        except (KeyboardInterrupt, SystemExit):
+            raise
+        except Exception as e:
+            return _Prepped(error=f"{type(e).__name__}: {e}")
+
     def _meta(self, p: _Prepped) -> planlib.CaseMeta:
         if p.mask is None:
             return planlib.CaseMeta(None, None, 0, 0)
@@ -740,8 +783,13 @@ class PlanExecutor:
     # -- window API ----------------------------------------------------------
 
     def submit_window(self, cases, batch_size=None) -> _Window:
-        """Prep one window and issue EVERY device launch for it (no drains)."""
-        prepped = [self._prep_case(*c, fields=self.prune) for c in cases]
+        """Prep one window and issue EVERY device launch for it (no drains).
+
+        Each case is an ``(image, mask, spacing)`` tuple or a zero-arg
+        loader callable; a case that fails to load or validate is
+        quarantined (NaN row) instead of killing the window.
+        """
+        prepped = [self._prep_case_safe(c, fields=self.prune) for c in cases]
         return self.submit_prepped(prepped, batch_size)
 
     def submit_prepped(self, prepped, batch_size=None) -> _Window:
@@ -810,13 +858,67 @@ class PlanExecutor:
             )
         return _Window(prepped, plan, mc_futs, diam_futs, [], aux, t_prune)
 
+    def resubmit_window(self, window: _Window) -> _Window:
+        """Idempotently re-submit a window from its prepped device state.
+
+        The retry path: pass 1 may have overwritten each case's
+        ``vertex_cap`` with its pass-2b bucket and attached a
+        ``PruneInfo``, so both are reset to the prep-time state (the cap
+        is the length of the retained vertex stack) before re-planning --
+        the stacks themselves were never mutated, so the re-run is
+        bit-identical to a first run (padding invariance, tier-1-locked).
+        Quarantined and empty cases pass through untouched.
+        """
+        for p in window.prepped:
+            if p.mask is None or p.error is not None:
+                continue
+            if p.verts is not None:
+                p.vertex_cap = int(p.verts.shape[0])
+                p.prune_info = None
+        return self.submit_prepped(window.prepped)
+
     def collect_window(self, window: _Window):
-        """Drain one submitted window; returns ``(rows, stats)`` in order."""
+        """Drain one submitted window; returns ``(rows, stats)`` in order.
+
+        With a ``retry`` policy configured (``runtime/resilience.
+        RetryPolicy``), a collect failure re-submits the window from its
+        prepped device state and re-drains after exponential backoff, up
+        to ``max_retries`` times -- a transient device/link fault costs
+        one window of recompute, not the run.  ``timeout_s`` is advisory:
+        an over-deadline collect is flagged in the stats for the
+        straggler census (a blocking fetch cannot be interrupted).
+        """
+        policy = self.retry
+        if policy is None:
+            return self._collect_window(window)
+        attempt = 0
+        while True:
+            t0 = time.perf_counter()
+            try:
+                rows, stats = self._collect_window(window)
+            except (KeyboardInterrupt, SystemExit):
+                raise
+            except Exception:
+                if attempt >= policy.max_retries:
+                    raise
+                self.window_retries += 1
+                time.sleep(policy.delay(attempt))
+                window = self.resubmit_window(window)
+                attempt += 1
+                continue
+            dt = time.perf_counter() - t0
+            if policy.timeout_s is not None and dt > policy.timeout_s:
+                stats["collect_timeout"] = dt
+            if attempt:
+                stats["window_retries"] = attempt
+            return rows, stats
+
+    def _collect_window(self, window: _Window):
         prepped = window.prepped
         if window.fused_futs:  # legacy one-pass path
             out = self._drain(window.fused_futs, "pass2")
             rows = [
-                np.zeros(self.N_FEATURES, np.float32) if p.mask is None
+                self._degenerate_row(p) if p.mask is None
                 else np.asarray(out[i], np.float32)
                 for i, p in enumerate(prepped)
             ]
@@ -834,7 +936,7 @@ class PlanExecutor:
         rows = []
         for i, p in enumerate(prepped):
             if p.mask is None:
-                rows.append(np.zeros(self.N_FEATURES, np.float32))
+                rows.append(self._degenerate_row(p))
                 continue
             rows.append(
                 np.concatenate(
@@ -844,6 +946,14 @@ class PlanExecutor:
                 )
             )
         return rows, self._window_stats(window)
+
+    def _degenerate_row(self, p: _Prepped) -> np.ndarray:
+        """Row for a case that ran no launches: zeros (empty mask, the
+        degenerate-segmentation contract) or NaNs (quarantined -- the
+        row-level error record; the message rides the window stats)."""
+        if p.error is not None:
+            return np.full(self.N_FEATURES, np.nan, np.float32)
+        return np.zeros(self.N_FEATURES, np.float32)
 
     def _window_stats(self, window: _Window) -> dict:
         prepped = window.prepped
@@ -855,7 +965,13 @@ class PlanExecutor:
                 {p.vertex_cap for p in prepped if p.vertex_cap}
             ),
             "pruned_cases": len(pruned),
-            "empty_cases": sum(1 for p in prepped if p.mask is None),
+            "empty_cases": sum(
+                1 for p in prepped if p.mask is None and p.error is None
+            ),
+            "quarantined_cases": sum(1 for p in prepped if p.error is not None),
+            "errors": {
+                i: p.error for i, p in enumerate(prepped) if p.error is not None
+            },
             "mean_keep_fraction": (
                 float(np.mean([inf.keep_fraction for inf in infos]))
                 if infos else 1.0
@@ -953,7 +1069,7 @@ class PlanExecutor:
         buf: list = []
         census = planlib.WindowCensus()
         for case in cases:
-            p = self._prep_case(*case, fields=self.prune)
+            p = self._prep_case_safe(case, fields=self.prune)
             meta = self._meta(p)
             if buf and cm.should_close(census, meta):
                 state = self.submit_prepped(buf, batch_size)

@@ -75,6 +75,33 @@ Legacy paths kept as parity baselines: ``prune=False`` (one-pass fused
 pipeline), ``device_compact=False`` (PR 2 host-side compaction).
 Empty-mask cases yield all-zero rows instead of raising: a 40k-case
 sweep must not die on one degenerate segmentation.
+
+Resilience (``runtime/resilience``) -- the layer that makes the 40k-case
+cluster run *survivable*, not just fast:
+
+* **manifest format**: ``RunManifest`` is an atomic append-only JSONL
+  file, one record per case, keyed by a CONTENT hash of the mask bytes +
+  spacing (``{"id", "name", "status": "done"|"error", "features"|
+  "error", "window"}``).  ``resume()`` rebuilds the done-set, repairing
+  a torn tail (a record cut mid-write by a kill) by truncating back to
+  the last complete line; ``record`` is idempotent (an id already done
+  is never written twice).
+* **quarantine semantics**: every case entering ``submit_window`` /
+  ``extract_stream`` may be a tuple or a lazy loader callable; a case
+  that fails to load or validate (e.g. a NaN-poisoned mask) degrades to
+  a row-level error -- an all-NaN feature row plus an ``errors`` entry
+  in the window stats -- and the remaining cases of the window are
+  bit-identical to a run without it (tier-1-locked).  Empty masks stay
+  all-zero ``done`` rows.  With a ``retry`` policy, a collect-time
+  fault re-submits the window from its prepped device state with
+  exponential backoff (``resubmit_window``; bit-identical re-run).
+* **resume guarantees**: a run preempted mid-stream (SIGTERM via
+  ``PreemptionHandler``) and resumed produces a manifest record-set
+  bit-identical to an uninterrupted run, with zero lost and zero
+  duplicated ids, redoing at most ONE window of work (the in-flight
+  window; rows already committed are skipped by the done-set).  Proved
+  by ``tests/test_resilience.py`` (tier-1) and soaked at scale by
+  ``benchmarks/soak.py``.
 """
 from __future__ import annotations
 
@@ -108,7 +135,10 @@ class BatchedExtractor:
     ``variant='auto'`` / ``mc_block='auto'`` / ``compact_block='auto'``
     resolve the measured-best kernel configurations per (bucket,
     batch-depth) from the autotune cache.  ``mesh`` defaults to the
-    ambient ``parallel.sharding.use_mesh`` context.
+    ambient ``parallel.sharding.use_mesh`` context.  ``retry`` takes a
+    ``runtime/resilience.RetryPolicy`` for backed-off per-window retry;
+    failed/poisoned cases quarantine as NaN rows (see the module
+    docstring's Resilience section).
     """
 
     N_FEATURES = PlanExecutor.N_FEATURES
@@ -118,12 +148,13 @@ class BatchedExtractor:
                  mc_block="auto", mc_chunk: int | None = None,
                  k_dirs: int = 16, device_compact: bool = True,
                  compact_block="auto", schedule: str = "counted",
-                 prep: str = "count", transfer_callback=None):
+                 prep: str = "count", transfer_callback=None, retry=None):
         self.executor = PlanExecutor(
             backend=backend, variant=variant, mesh=mesh, data_axis=data_axis,
             prune=prune, mc_block=mc_block, mc_chunk=mc_chunk, k_dirs=k_dirs,
             device_compact=device_compact, compact_block=compact_block,
             schedule=schedule, prep=prep, transfer_callback=transfer_callback,
+            retry=retry,
         )
         ex = self.executor
         self.backend = ex.backend

@@ -158,8 +158,30 @@ class CheckpointManager:
         return tree, manifest["extras"]
 
     def restore_latest(self, skeleton, shardings=None):
-        step = self.latest_step()
-        if step is None:
-            return None
-        tree, extras = self.restore(step, skeleton, shardings)
-        return step, tree, extras
+        """Load the newest readable checkpoint, walking back over torn ones.
+
+        The ``_COMMITTED`` marker already screens out checkpoints whose
+        writer died before the rename -- but a marker can survive while a
+        leaf file is later truncated or lost (disk-full, partial rsync,
+        bit-rot).  ``restore`` stays strict (a named step either loads or
+        raises); ``restore_latest`` is the recovery path, so it falls
+        back to the previous committed step when the newest fails to
+        deserialize.  Returns ``None`` only when no step is readable.
+        """
+        last_err = None
+        for step in reversed(self.all_steps()):
+            try:
+                tree, extras = self.restore(step, skeleton, shardings)
+                return step, tree, extras
+            except (OSError, ValueError, KeyError, json.JSONDecodeError,
+                    EOFError) as e:
+                last_err = e
+                continue
+        if last_err is not None:
+            import warnings
+
+            warnings.warn(
+                f"no readable checkpoint (newest failed with: {last_err!r})",
+                RuntimeWarning, stacklevel=2,
+            )
+        return None

@@ -26,15 +26,35 @@ from jax.sharding import Mesh
 
 @dataclass
 class StragglerDetector:
+    """Median-based outlier detection over step (or window) wall-times.
+
+    ``warmup`` observations are swallowed entirely -- neither flagged nor
+    admitted to the median window -- because the first step/window of a
+    jax pipeline pays its cold compiles and would otherwise both (a) be
+    flagged as a spurious straggler and (b) inflate the median every
+    real straggler is compared against.  ``min_samples`` overrides the
+    default ``max(8, window // 4)`` flagging threshold for short runs
+    (e.g. the streaming pipeline's per-window census, where a 13-window
+    job should still flag its stalled 9th window).
+    """
+
     window: int = 50
     threshold: float = 2.0
+    warmup: int = 0
+    min_samples: int | None = None
     _times: deque = field(default_factory=lambda: deque(maxlen=256))
     slow_steps: list = field(default_factory=list)
+    _seen: int = field(default=0, repr=False)
 
     def observe(self, step: int, seconds: float) -> bool:
         """Record a step time; returns True if this step was a straggler."""
+        self._seen += 1
+        if self._seen <= self.warmup:
+            return False  # cold-compile grace: excluded from the median too
         self._times.append(seconds)
-        if len(self._times) < max(8, self.window // 4):
+        need = self.min_samples if self.min_samples is not None \
+            else max(8, self.window // 4)
+        if len(self._times) < max(2, need):
             return False
         med = sorted(self._times)[len(self._times) // 2]
         if seconds > self.threshold * med:
@@ -50,24 +70,47 @@ class StragglerDetector:
 
 
 class PreemptionHandler:
-    """SIGTERM -> request a final checkpoint at the next step boundary."""
+    """SIGTERM -> request a graceful stop at the next step/window boundary.
+
+    ``install`` CHAINS any pre-existing Python SIGTERM handler (it still
+    fires after ours -- two independent layers both get their preemption
+    notice) and is idempotent: a second ``install`` is a no-op rather
+    than making the handler its own predecessor.  ``uninstall`` restores
+    exactly what was installed before -- including ``SIG_DFL``/``SIG_IGN``
+    dispositions and the C-level ``None`` case (restored as ``SIG_DFL``,
+    the closest Python can express).
+    """
 
     def __init__(self):
         self.requested = False
         self._prev = None
+        self._installed = False
 
     def install(self):
+        if self._installed:
+            return self
+
         def handler(signum, frame):
             self.requested = True
-            if callable(self._prev):  # pragma: no cover
-                self._prev(signum, frame)
+            prev = self._prev
+            if callable(prev) and prev is not handler:
+                prev(signum, frame)
 
         self._prev = signal.signal(signal.SIGTERM, handler)
+        self._installed = True
         return self
 
     def uninstall(self):
-        if self._prev is not None:
-            signal.signal(signal.SIGTERM, self._prev)
+        if not self._installed:
+            return
+        prev = self._prev if self._prev is not None else signal.SIG_DFL
+        signal.signal(signal.SIGTERM, prev)
+        self._prev = None
+        self._installed = False
+
+    def reset(self):
+        """Clear a consumed preemption notice (e.g. between runner calls)."""
+        self.requested = False
 
 
 def surviving_mesh(axis_names=("data", "model"), model_parallel: int = 1,

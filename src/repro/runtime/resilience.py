@@ -1,0 +1,584 @@
+"""Resilience layer: resumable manifests, fault injection, retry, soak.
+
+The paper's workload -- feature extraction over ~40 000 CT scans on a
+shared cluster -- is exactly the regime where jobs get preempted,
+stragglers stall windows, and a single poisoned case can kill hours of
+work.  This module promotes the cluster example's ad-hoc JSONL
+checkpointing into a first-class layer over the plan/executor pipeline:
+
+* :class:`RunManifest` -- a resumable run manifest.  Case identity is a
+  CONTENT hash of the mask bytes + spacing (:meth:`RunManifest.case_id`),
+  so resume survives renames, reorderings, and regenerated inputs; the
+  file is atomic append-only JSONL (one record per case, one ``write``
+  per record) with a done-set built by :meth:`RunManifest.resume`, which
+  also repairs a torn tail (a record cut mid-write by a kill) by
+  truncating back to the last complete line.  ``record`` is idempotent:
+  a case id already in the done-set is never written twice, which is
+  what makes re-submitting the at-most-one in-flight window safe.
+
+* :class:`FaultPlan` -- deterministic seeded fault injection for testing
+  and soaking: per-case load errors and NaN/empty-mask poisoned cases
+  (keyed by ``(seed, case index)`` so a resumed run sees the identical
+  fault pattern), transient collect-time faults raised through the
+  executor's ``transfer_callback`` (exercising the retry path), simulated
+  SIGTERM preemption through the REAL signal machinery
+  (:class:`~repro.runtime.fault_tolerance.PreemptionHandler`), and
+  artificial per-window latency for straggler testing.
+
+* :class:`RetryPolicy` -- per-window retry with exponential backoff,
+  consumed by ``PlanExecutor.collect_window``: a failed window collect
+  is re-submitted from its already-prepped device state
+  (``resubmit_window``, bit-identical by the pipeline's padding
+  invariance) and re-drained, up to ``max_retries`` times.  ``timeout_s``
+  is advisory: a window whose collect exceeds it is flagged in the
+  window stats (a blocking device fetch cannot be interrupted), which
+  the straggler census picks up.
+
+* :class:`ResilientRunner` -- the driver that threads all of it through
+  the streaming front-end's submit/collect overlap: skip-done by content
+  id, per-case quarantine (a poisoned case degrades to a row-level
+  ``error`` record instead of killing the window -- the executor's
+  contract), manifest writes as each window drains, preemption checks at
+  window boundaries (at most ONE window of work is ever redone after a
+  kill), and window wall-times observed by a
+  :class:`~repro.runtime.fault_tolerance.StragglerDetector`.
+
+Manifest record format (one JSON object per line)::
+
+    {"id": "<blake2b-128 of mask bytes+shape+dtype+spacing>",
+     "name": "<optional caller-supplied case name>",
+     "status": "done" | "error",
+     "features": {"MeshVolume": ..., ...},     # status == "done"
+     "error": "<quarantine reason>",           # status == "error"
+     "window": <window ordinal that produced the row>}
+
+Resume guarantees (locked by tier-1 tests + ``benchmarks/soak.py``):
+
+* a run preempted mid-stream and resumed produces a manifest whose
+  record SET is bit-identical to an uninterrupted run's;
+* zero lost and zero duplicated case ids (idempotent ``record`` + the
+  done-set skip);
+* at most one window of extraction work is redone after a kill.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import signal
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.runtime.fault_tolerance import PreemptionHandler, StragglerDetector
+
+# canonical feature-row column names (PlanExecutor.N_FEATURES order)
+FEATURE_NAMES = (
+    "MeshVolume",
+    "SurfaceArea",
+    "Maximum3DDiameter",
+    "Maximum2DDiameterSlice",
+    "Maximum2DDiameterRow",
+    "Maximum2DDiameterColumn",
+    "n_vertices",
+)
+
+
+class InjectedFault(RuntimeError):
+    """A fault raised by :class:`FaultPlan` (distinguishable from real bugs)."""
+
+
+# ---------------------------------------------------------------------------
+# resumable run manifest
+# ---------------------------------------------------------------------------
+
+
+class RunManifest:
+    """Atomic append-only JSONL run manifest with a content-hashed done-set.
+
+    See the module docstring for the record format and the resume
+    guarantees.  ``fsync=True`` additionally fsyncs every record (safe
+    against power loss, ~10x slower on many small rows; the default
+    flush-per-record already survives process kills, which is the
+    cluster-preemption threat model).
+    """
+
+    def __init__(self, path, fsync: bool = False):
+        self.path = Path(path)
+        self.fsync = fsync
+        self._done: dict[str, dict] = {}
+        self._f = None
+        self._loaded = False
+
+    # -- identity ------------------------------------------------------------
+
+    @staticmethod
+    def case_id(mask, spacing) -> str:
+        """Content hash of one case: mask bytes + shape + dtype + spacing.
+
+        The id is what makes resume independent of names, ordering, and
+        the loader that produced the case -- and is also an integrity
+        check: a silently-changed input hashes to a NEW case.
+        """
+        m = np.ascontiguousarray(np.asarray(mask))
+        h = hashlib.blake2b(digest_size=16)
+        h.update(repr((m.shape, str(m.dtype))).encode())
+        h.update(m.tobytes())
+        h.update(np.asarray(spacing, np.float64).tobytes())
+        return h.hexdigest()
+
+    # -- read / resume -------------------------------------------------------
+
+    def resume(self) -> set[str]:
+        """Load the manifest; return the done-set of case ids.
+
+        Tolerates (and REPAIRS) a torn tail: a process killed mid-write
+        leaves a final line with no terminator or invalid JSON; every
+        complete record before it is kept, the torn bytes are truncated
+        away so the next append starts on a clean line boundary, and the
+        partial case simply re-runs (it was never committed).
+        """
+        self.close()
+        self._done = {}
+        self._loaded = True
+        if not self.path.exists():
+            return set()
+        data = self.path.read_bytes()
+        good_end = 0
+        pos = 0
+        while pos < len(data):
+            nl = data.find(b"\n", pos)
+            if nl < 0:
+                break  # unterminated tail: torn write
+            line = data[pos : nl]
+            try:
+                rec = json.loads(line)
+                rid = rec["id"]
+            except (ValueError, KeyError, TypeError):
+                break  # corrupt line: everything after it is suspect
+            self._done.setdefault(rid, rec)
+            pos = good_end = nl + 1
+        if good_end < len(data):  # repair: truncate the torn tail
+            with open(self.path, "r+b") as f:
+                f.truncate(good_end)
+        return set(self._done)
+
+    @property
+    def done(self) -> dict:
+        """``{case id: record}`` of committed rows (resume() must run first)."""
+        return self._done
+
+    def rows(self) -> list[dict]:
+        """Committed records, in first-written order."""
+        return list(self._done.values())
+
+    # -- write ---------------------------------------------------------------
+
+    def record(self, case_id: str, status: str, *, name=None, features=None,
+               error=None, window=None) -> bool:
+        """Append one record; returns False (no write) if already done.
+
+        The idempotence is the manifest's dedup guarantee: a re-submitted
+        in-flight window whose rows were partially committed before a
+        kill re-records only the missing cases.  One ``write`` call per
+        record on an O_APPEND stream keeps each line atomic against
+        interleaved writers and clean against kills (the torn-tail repair
+        handles the partial line).
+        """
+        if not self._loaded:
+            self.resume()
+        if case_id in self._done:
+            return False
+        rec = {"id": case_id, "status": status}
+        if name is not None:
+            rec["name"] = name
+        if status == "done":
+            rec["features"] = {k: float(v) for k, v in (features or {}).items()}
+        if error is not None:
+            rec["error"] = str(error)
+        if window is not None:
+            rec["window"] = int(window)
+        if self._f is None:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            self._f = open(self.path, "ab")
+        self._f.write((json.dumps(rec, sort_keys=True) + "\n").encode())
+        self._f.flush()
+        if self.fsync:
+            os.fsync(self._f.fileno())
+        self._done[case_id] = rec
+        return True
+
+    def flush(self):
+        if self._f is not None:
+            self._f.flush()
+
+    def close(self):
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+    def __enter__(self):
+        self.resume()
+        return self
+
+    def __exit__(self, *a):
+        self.close()
+
+
+# ---------------------------------------------------------------------------
+# deterministic fault injection
+# ---------------------------------------------------------------------------
+
+# executor fetch stages that belong to window COLLECT (transient faults
+# target these so a submit never dies half-planned; under the sync-free
+# static+hint configuration they are the only fetch stages at all)
+COLLECT_STAGES = frozenset(
+    ("pass2", "pass2a", "pass2b", "pass2b_counts", "pass2b_retry",
+     "collect_counts", "hint_retry")
+)
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Seeded, deterministic fault injection for resilience testing.
+
+    Every per-case decision is keyed by ``(seed, case index)`` and every
+    per-window decision by ``(seed, window ordinal)``, so a resumed run
+    replays the IDENTICAL fault pattern -- which is what lets the soak
+    assert the faulted+preempted+resumed manifest equals the faulted
+    uninterrupted one bit-for-bit.
+
+    * ``load_error_rate``: the case raises :class:`InjectedFault` at load
+      time (a corrupt file / dead NFS mount) -> quarantined by name;
+    * ``poison_nan_rate``: the mask is replaced by a float copy with NaNs
+      scattered in (a poisoned segmentation) -> quarantined by the
+      executor's non-finite validation as a row-level ``error`` record;
+    * ``poison_empty_rate``: the mask is zeroed -> the pipeline's
+      all-zero-row degenerate contract (NOT an error);
+    * ``window_fault_rate`` / ``fail_windows``: one transient
+      :class:`InjectedFault` per selected window, raised from the
+      executor's ``transfer_callback`` during collect -> exercises the
+      :class:`RetryPolicy` backoff/re-submit path;
+    * ``preempt_at_case``: when the runner reaches this case ordinal it
+      sends a REAL ``SIGTERM`` to the process (once), driving the
+      installed :class:`PreemptionHandler` exactly like a cluster
+      preemption notice;
+    * ``straggle_windows`` + ``straggle_seconds``: artificial latency
+      added inside the named windows' timed collect region, for
+      :class:`StragglerDetector` testing.
+    """
+
+    seed: int = 0
+    load_error_rate: float = 0.0
+    poison_nan_rate: float = 0.0
+    poison_empty_rate: float = 0.0
+    window_fault_rate: float = 0.0
+    fail_windows: tuple = ()
+    preempt_at_case: int | None = None
+    straggle_windows: tuple = ()
+    straggle_seconds: float = 0.0
+
+    def __post_init__(self):
+        self._preempted = False
+        self._pending_fault = None
+        self._spent_windows: set[int] = set()
+
+    # -- per-case faults -----------------------------------------------------
+
+    def inject_case(self, index: int, case):
+        """Apply this plan's per-case faults to ``(image, mask, spacing)``.
+
+        Raises :class:`InjectedFault` for a load-error case; returns the
+        (possibly poisoned) case otherwise.  Deterministic per index.
+        """
+        r = np.random.default_rng((self.seed, 101, index)).random(3)
+        if r[0] < self.load_error_rate:
+            raise InjectedFault(f"load error injected at case {index}")
+        image, mask, spacing = case
+        if r[1] < self.poison_nan_rate:
+            bad = np.asarray(mask, np.float32).copy()
+            flat = bad.reshape(-1)
+            idx = np.random.default_rng((self.seed, 102, index)).integers(
+                0, flat.size, size=max(1, flat.size // 64)
+            )
+            flat[idx] = np.nan
+            return image, bad, spacing
+        if r[2] < self.poison_empty_rate:
+            return image, np.zeros_like(np.asarray(mask)), spacing
+        return image, mask, spacing
+
+    # -- per-window faults ---------------------------------------------------
+
+    def begin_window(self, widx: int):
+        """Arm (at most) one transient collect fault for window ``widx``."""
+        if widx in self._spent_windows:
+            return
+        armed = widx in self.fail_windows
+        if not armed and self.window_fault_rate:
+            armed = (
+                np.random.default_rng((self.seed, 103, widx)).random()
+                < self.window_fault_rate
+            )
+        if armed:
+            self._pending_fault = widx
+
+    def transfer_hook(self, stage: str, x):
+        """``PlanExecutor`` transfer_callback: raise the armed fault once."""
+        if self._pending_fault is not None and stage in COLLECT_STAGES:
+            w, self._pending_fault = self._pending_fault, None
+            self._spent_windows.add(w)
+            raise InjectedFault(
+                f"transient collect fault injected (window {w}, stage {stage})"
+            )
+
+    def maybe_straggle(self, widx: int):
+        """Sleep inside window ``widx``'s timed region (straggler sim)."""
+        if widx in self.straggle_windows and self.straggle_seconds > 0:
+            time.sleep(self.straggle_seconds)
+
+    def should_preempt(self, index: int) -> bool:
+        """True exactly once, when the case ordinal reaches the trigger."""
+        if self.preempt_at_case is None or self._preempted:
+            return False
+        if index >= self.preempt_at_case:
+            self._preempted = True
+            return True
+        return False
+
+
+# ---------------------------------------------------------------------------
+# retry / backoff policy
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Per-window retry with exponential backoff (no jitter: deterministic).
+
+    Consumed by ``PlanExecutor.collect_window``: a window whose collect
+    raises is re-submitted from its prepped device state and re-drained
+    after ``base_delay * multiplier^k`` seconds (capped at ``max_delay``),
+    up to ``max_retries`` times; the last failure re-raises.
+    ``timeout_s`` is advisory -- a collect exceeding it is flagged in the
+    window stats (``collect_timeout``) for the straggler census, since a
+    blocking device fetch cannot be interrupted portably.
+    """
+
+    max_retries: int = 2
+    base_delay: float = 0.05
+    multiplier: float = 2.0
+    max_delay: float = 2.0
+    timeout_s: float | None = None
+
+    def delay(self, attempt: int) -> float:
+        """Backoff before retry ``attempt`` (0-based)."""
+        return min(self.base_delay * self.multiplier ** attempt, self.max_delay)
+
+
+# ---------------------------------------------------------------------------
+# the resilient run driver
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RunReport:
+    """What one :meth:`ResilientRunner.run` call did."""
+
+    status: str = "complete"  # 'complete' | 'preempted'
+    skipped: int = 0          # cases already in the manifest (or re-recorded)
+    processed: int = 0        # rows written this run (done + error)
+    quarantined: int = 0      # of processed: row-level error records
+    windows: int = 0          # windows collected this run
+    window_retries: int = 0   # collect retries the executor performed
+    stragglers: list = dataclasses.field(default_factory=list)
+    seconds: float = 0.0
+
+    @property
+    def cases_per_second(self) -> float:
+        return self.processed / self.seconds if self.seconds > 0 else 0.0
+
+
+class ResilientRunner:
+    """Drive an extractor over a case stream with full resilience.
+
+    ``cases`` yields ``(name, image, mask, spacing)`` tuples or lazy
+    ``(name, loader)`` pairs (``loader() -> (image, mask, spacing)``);
+    lazy loaders keep load faults quarantinable per case.  The runner
+    mirrors ``extract_stream``'s submit/collect overlap (window k+1 is
+    submitted before window k is drained) and interleaves the resilience
+    duties at the window boundaries:
+
+    * done-set skip by content id BEFORE any prep work;
+    * per-case quarantine via the executor's safe prep (a poisoned case
+      becomes a row-level ``error`` record, never a window abort);
+    * manifest ``record`` per row as each window drains (a kill loses at
+      most the in-flight window);
+    * preemption checks each case: on SIGTERM the open buffer is
+      abandoned and -- with ``drain_on_preempt=True`` (the grace-period
+      behaviour) -- the already-submitted window is still drained and
+      committed, so at most ONE window of work is ever redone;
+    * per-window wall-times observed by the straggler detector and
+      surfaced through ``stats_callback(widx, stats)`` (census print).
+    """
+
+    def __init__(self, extractor, manifest: RunManifest, *, window: int = 16,
+                 fault_plan: FaultPlan | None = None,
+                 straggler: StragglerDetector | None = None,
+                 preemption: PreemptionHandler | None = None,
+                 drain_on_preempt: bool = True, stats_callback=None,
+                 feature_names=FEATURE_NAMES):
+        if not isinstance(window, int) or window < 1:
+            raise ValueError(f"window must be a positive int, got {window!r}")
+        self.extractor = extractor
+        self.ex = getattr(extractor, "executor", extractor)
+        self.manifest = manifest
+        self.window = window
+        self.fault_plan = fault_plan
+        self.straggler = straggler or StragglerDetector(
+            window=8, warmup=1, min_samples=4
+        )
+        self.preemption = preemption
+        self.drain_on_preempt = drain_on_preempt
+        self.stats_callback = stats_callback
+        self.feature_names = tuple(feature_names)
+
+    # -- internals -----------------------------------------------------------
+
+    def _load(self, index: int, item):
+        """Materialise one case; faults (injected or real) raise here."""
+        if len(item) == 2 and callable(item[1]):
+            case = item[1]()
+        else:
+            case = tuple(item[1:])
+        if self.fault_plan is not None:
+            case = self.fault_plan.inject_case(index, case)
+        if len(case) != 3:
+            raise ValueError(f"case must be (image, mask, spacing), "
+                             f"got {len(case)} elements")
+        return case
+
+    def _collect(self, pending, report: RunReport):
+        """Drain one submitted window; write its manifest rows."""
+        widx, state, recs = pending
+        fp = self.fault_plan
+        if fp is not None:
+            fp.begin_window(widx)
+        t0 = time.perf_counter()
+        if fp is not None:
+            fp.maybe_straggle(widx)  # inside the timed region
+        rows, stats = self.ex.collect_window(state)
+        dt = time.perf_counter() - t0
+        slow = self.straggler.observe(widx, dt)
+        if slow:
+            report.stragglers.append((widx, dt))
+        for j, ((cid, name), row) in enumerate(zip(recs, rows)):
+            # rows align with recs by construction; error rows are NaN
+            if np.isnan(np.asarray(row)).any():
+                err = stats.get("errors", {}).get(j, "quarantined")
+                wrote = self.manifest.record(
+                    cid, "error", name=name, error=err, window=widx
+                )
+                if wrote:
+                    report.processed += 1
+                    report.quarantined += 1
+                else:
+                    report.skipped += 1
+                continue
+            wrote = self.manifest.record(
+                cid, "done", name=name,
+                features=dict(zip(self.feature_names, np.asarray(row))),
+                window=widx,
+            )
+            if wrote:
+                report.processed += 1
+            else:
+                report.skipped += 1
+        report.windows += 1
+        if self.stats_callback is not None:
+            census = dict(state.plan.stats())
+            census.update(
+                window=widx, seconds=dt, straggler=slow,
+                quarantined=stats.get("quarantined_cases", 0),
+                straggler_median=self.straggler.median,
+            )
+            self.stats_callback(widx, census)
+
+    # -- driving -------------------------------------------------------------
+
+    def run(self, cases) -> RunReport:
+        """Stream ``cases`` through the extractor with full resilience."""
+        ex = self.ex
+        man = self.manifest
+        if not man._loaded:
+            man.resume()
+        handler = self.preemption or PreemptionHandler()
+        own_handler = self.preemption is None
+        handler.install()
+        report = RunReport()
+        retries0 = getattr(ex, "window_retries", 0)
+        t0 = time.perf_counter()
+        pending = None  # (widx, submitted window state, [(case id, name)])
+        buf: list = []  # [(case id, name, prepped)]
+        widx = 0
+        preempted = False
+        fp = self.fault_plan
+        try:
+            for index, item in enumerate(cases):
+                if fp is not None and fp.should_preempt(index):
+                    os.kill(os.getpid(), signal.SIGTERM)  # the real signal
+                if handler.requested:
+                    preempted = True
+                    break
+                name = item[0]
+                try:
+                    case = self._load(index, item)
+                    cid = RunManifest.case_id(case[1], case[2])
+                except (KeyboardInterrupt, SystemExit):
+                    raise
+                except Exception as e:
+                    # load error: no content to hash -- quarantine by name
+                    eid = f"{name or 'case'}@{index}"
+                    if man.record(eid, "error", name=name,
+                                  error=f"{type(e).__name__}: {e}"):
+                        report.processed += 1
+                        report.quarantined += 1
+                    else:
+                        report.skipped += 1
+                    continue
+                if cid in man.done:
+                    report.skipped += 1
+                    continue
+                buf.append((cid, name, ex._prep_case_safe(case, fields=ex.prune)))
+                if len(buf) >= self.window:
+                    # submit k+1 BEFORE draining k: the stream overlap
+                    state = ex.submit_prepped([p for _, _, p in buf])
+                    if pending is not None:
+                        self._collect(pending, report)
+                    pending = (widx, state, [(c, n) for c, n, _ in buf])
+                    buf = []
+                    widx += 1
+            if not preempted and buf:
+                state = ex.submit_prepped([p for _, _, p in buf])
+                if pending is not None:
+                    self._collect(pending, report)
+                pending = (widx, state, [(c, n) for c, n, _ in buf])
+                buf = []
+                widx += 1
+            if pending is not None and (not preempted or self.drain_on_preempt):
+                # grace-period drain: the in-flight window was already
+                # submitted; committing it is what bounds the redo to the
+                # (abandoned) open buffer.  drain_on_preempt=False models
+                # a hard kill: the whole in-flight window is redone.
+                self._collect(pending, report)
+                pending = None
+        finally:
+            if own_handler:
+                handler.uninstall()
+            man.flush()
+        report.status = "preempted" if (preempted or handler.requested) \
+            else "complete"
+        report.seconds = time.perf_counter() - t0
+        report.window_retries = getattr(ex, "window_retries", 0) - retries0
+        return report

@@ -1,0 +1,113 @@
+"""CheckpointManager contract: round-trips, retention, torn-write recovery.
+
+``tests/test_system.py`` exercises checkpointing through the trainer;
+this file is the direct unit contract for ``runtime/checkpoint`` --
+including the recovery path a resumable extraction run depends on:
+``restore_latest`` must walk back past a checkpoint whose commit marker
+survived but whose payload did not (disk-full / partial copy), and
+return the newest step that actually deserializes.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.runtime.checkpoint import CheckpointManager
+
+pytestmark = pytest.mark.tier1
+
+
+def _tree(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {
+            "w": rng.standard_normal((4, 3)).astype(np.float32),
+            "b": rng.standard_normal((3,)).astype(np.float32),
+        },
+        "step_scalar": np.int32(seed),
+    }
+
+
+def _assert_tree_equal(a, b):
+    jax.tree.map(
+        lambda x, y: np.testing.assert_array_equal(np.asarray(x), np.asarray(y)),
+        a, b,
+    )
+
+
+def test_save_restore_latest_roundtrip(tmp_path):
+    m = CheckpointManager(tmp_path, keep=3)
+    t = _tree(7)
+    m.save(42, t, extras={"kind": "unit"})
+    step, got, extras = m.restore_latest(jax.tree.map(lambda x: x, t))
+    assert step == 42
+    assert extras == {"kind": "unit"}
+    _assert_tree_equal(t, got)
+
+
+def test_save_async_wait_then_restore(tmp_path):
+    m = CheckpointManager(tmp_path, keep=3)
+    t = _tree(1)
+    m.save_async(5, t, extras={"async": True})
+    m.wait()
+    step, got, extras = m.restore_latest(jax.tree.map(lambda x: x, t))
+    assert step == 5 and extras == {"async": True}
+    _assert_tree_equal(t, got)
+
+
+def test_keep_gc_retains_newest_k(tmp_path):
+    m = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 3, 8, 9):
+        m.save(s, _tree(s))
+    assert m.all_steps() == [8, 9]
+    # keep=0 disables GC entirely
+    m0 = CheckpointManager(tmp_path / "nogc", keep=0)
+    for s in (1, 2, 3):
+        m0.save(s, _tree(s))
+    assert m0.all_steps() == [1, 2, 3]
+
+
+def test_restore_latest_none_when_empty(tmp_path):
+    m = CheckpointManager(tmp_path)
+    assert m.restore_latest({"x": np.zeros(2)}) is None
+
+
+def test_restore_latest_falls_back_over_torn_leaf(tmp_path):
+    m = CheckpointManager(tmp_path, keep=0)
+    t = _tree(3)
+    m.save(1, t)
+    m.save(2, _tree(4))
+    # tear step 2 AFTER commit: truncate one leaf file mid-payload
+    leaf = next((tmp_path / "step_00000002").glob("*.npy"))
+    leaf.write_bytes(leaf.read_bytes()[:16])
+    step, got, _ = m.restore_latest(jax.tree.map(lambda x: x, t))
+    assert step == 1
+    _assert_tree_equal(t, got)
+
+
+def test_restore_latest_falls_back_over_corrupt_manifest(tmp_path):
+    m = CheckpointManager(tmp_path, keep=0)
+    t = _tree(5)
+    m.save(1, t)
+    m.save(2, _tree(6))
+    (tmp_path / "step_00000002" / "MANIFEST.json").write_text("{ torn")
+    step, got, _ = m.restore_latest(jax.tree.map(lambda x: x, t))
+    assert step == 1
+    _assert_tree_equal(t, got)
+
+
+def test_restore_latest_warns_when_all_torn(tmp_path):
+    m = CheckpointManager(tmp_path, keep=0)
+    m.save(1, _tree(0))
+    (tmp_path / "step_00000001" / "MANIFEST.json").write_text("{ torn")
+    with pytest.warns(RuntimeWarning, match="no readable checkpoint"):
+        assert m.restore_latest({"x": np.zeros(2)}) is None
+
+
+def test_restore_named_step_stays_strict(tmp_path):
+    m = CheckpointManager(tmp_path, keep=0)
+    m.save(1, _tree(0))
+    (tmp_path / "step_00000001" / "MANIFEST.json").write_text("{ torn")
+    with pytest.raises(json.JSONDecodeError):
+        m.restore(1, {"x": np.zeros(2)})

@@ -1,0 +1,401 @@
+"""Resilience layer lockdown: manifest, quarantine, retry, kill/resume.
+
+The contracts under test (see runtime/resilience.py + core/executor.py):
+
+* ``RunManifest``: content-hashed case identity, idempotent append,
+  torn-tail repair on resume;
+* quarantine: a poisoned / unloadable case degrades to a row-level NaN
+  row + ``errors`` stats entry, the rest of the window bit-identical to
+  a run without it, and the sync-free ``static``+``hint`` config stays
+  at ZERO prep/pass-1 fetches with quarantined cases in the window;
+* ``RetryPolicy``: a transient collect fault costs one backed-off
+  re-submit (``resubmit_window``) and the retried rows are bit-identical
+  to an undisturbed run; exhaustion re-raises;
+* ``PreemptionHandler``: chains a pre-existing SIGTERM handler, restores
+  it on uninstall, idempotent install;
+* ``StragglerDetector``: warmup grace swallows the cold-compile outlier
+  (it is neither flagged nor admitted to the median);
+* THE acceptance criterion: a preempted + resumed run's manifest record
+  set is bit-identical to an uninterrupted run's, with zero lost and
+  zero duplicated ids, redoing at most one window of work.
+"""
+import functools
+import json
+import signal
+
+import numpy as np
+import pytest
+
+from repro.core.pipeline import BatchedExtractor
+from repro.data.synthetic import make_case
+from repro.runtime.fault_tolerance import PreemptionHandler, StragglerDetector
+from repro.runtime.resilience import (
+    COLLECT_STAGES,
+    FEATURE_NAMES,
+    FaultPlan,
+    InjectedFault,
+    ResilientRunner,
+    RetryPolicy,
+    RunManifest,
+)
+
+pytestmark = pytest.mark.tier1
+
+
+@pytest.fixture(autouse=True)
+def _isolated_autotune(tmp_path, monkeypatch):
+    # parity must not depend on (or pollute) the user's autotune cache
+    monkeypatch.setenv("REPRO_AUTOTUNE", "0")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "autotune.json"))
+
+
+@functools.lru_cache(maxsize=None)
+def _case(shape, seed):
+    return make_case(shape, seed=seed)
+
+
+def _poisoned(shape=(20, 18, 16), seed=3):
+    img, msk, sp = _case(shape, seed)
+    bad = np.asarray(msk, np.float32).copy()
+    bad[tuple(d // 2 for d in shape)] = np.nan
+    return img, bad, sp
+
+
+def _nan_row(row):
+    return np.isnan(np.asarray(row)).any()
+
+
+# ---------------------------------------------------------------------------
+# manifest: identity, idempotence, torn-tail repair
+# ---------------------------------------------------------------------------
+
+
+def test_case_id_is_content_sensitive():
+    img, msk, sp = _case((20, 18, 16), 1)
+    base = RunManifest.case_id(msk, sp)
+    # pure function of content: same content -> same id
+    assert RunManifest.case_id(msk.copy(), tuple(sp)) == base
+    # one voxel flip, spacing change, dtype change: all new identities
+    flipped = msk.copy()
+    flipped[0, 0, 0] = 1.0 - flipped[0, 0, 0]
+    assert RunManifest.case_id(flipped, sp) != base
+    assert RunManifest.case_id(msk, (1.0, 1.0, 2.0)) != base
+    assert RunManifest.case_id(msk.astype(np.float64), sp) != base
+    # shape is hashed independently of the raw bytes
+    assert RunManifest.case_id(msk.reshape(-1), sp) != base
+
+
+def test_manifest_roundtrip_and_idempotence(tmp_path):
+    p = tmp_path / "run.jsonl"
+    man = RunManifest(p)
+    assert man.resume() == set()
+    feats = dict(zip(FEATURE_NAMES, map(float, range(7))))
+    assert man.record("aaa", "done", name="c0", features=feats, window=0)
+    assert man.record("bbb", "error", name="c1", error="boom", window=0)
+    # idempotent: an id already committed is never written twice
+    assert not man.record("aaa", "done", name="c0", features=feats, window=9)
+    man.close()
+
+    man2 = RunManifest(p)
+    assert man2.resume() == {"aaa", "bbb"}
+    rows = man2.rows()
+    assert [r["id"] for r in rows] == ["aaa", "bbb"]  # first-written order
+    assert rows[0]["status"] == "done" and rows[0]["features"] == feats
+    assert rows[0]["window"] == 0  # the duplicate did not overwrite
+    assert rows[1]["status"] == "error" and rows[1]["error"] == "boom"
+    assert len(p.read_text().splitlines()) == 2
+
+
+def test_manifest_torn_tail_repaired_on_resume(tmp_path):
+    p = tmp_path / "run.jsonl"
+    with RunManifest(p) as man:
+        man.record("aaa", "done", features={})
+        man.record("bbb", "done", features={})
+    # a kill mid-write leaves an unterminated (or corrupt) final line
+    with open(p, "ab") as f:
+        f.write(b'{"id": "ccc", "status"')
+    man2 = RunManifest(p)
+    assert man2.resume() == {"aaa", "bbb"}
+    # the torn bytes were truncated away: appends start on a clean line
+    assert p.read_bytes().endswith(b"\n") and b"ccc" not in p.read_bytes()
+    assert man2.record("ccc", "done", features={})
+    assert RunManifest(p).resume() == {"aaa", "bbb", "ccc"}
+
+    # a terminated-but-corrupt line also stops the replay at the tear
+    with open(p, "ab") as f:
+        f.write(b"not json at all\n")
+        f.write(b'{"id": "ddd", "status": "done"}\n')
+    assert RunManifest(p).resume() == {"aaa", "bbb", "ccc"}
+
+
+def test_fault_plan_is_deterministic_per_index():
+    def outcomes(fp):
+        out = []
+        for i in range(40):
+            img, msk, sp = _case((20, 18, 16), 1)
+            try:
+                _, m2, _ = fp.inject_case(i, (img, msk, sp))
+            except InjectedFault:
+                out.append("load")
+                continue
+            m2 = np.asarray(m2)
+            if np.issubdtype(m2.dtype, np.floating) and np.isnan(m2).any():
+                out.append("nan")
+            elif not m2.any():
+                out.append("empty")
+            else:
+                out.append("ok")
+        return out
+
+    a = outcomes(FaultPlan(seed=7, load_error_rate=0.15, poison_nan_rate=0.15,
+                           poison_empty_rate=0.1))
+    b = outcomes(FaultPlan(seed=7, load_error_rate=0.15, poison_nan_rate=0.15,
+                           poison_empty_rate=0.1))
+    assert a == b
+    assert {"load", "nan", "ok"} <= set(a)  # the rates actually fire
+
+
+# ---------------------------------------------------------------------------
+# quarantine: row-level errors through the executor, sync-free invariants
+# ---------------------------------------------------------------------------
+
+
+def test_poisoned_case_quarantines_row_level_and_sync_free():
+    good = [_case((20, 18, 16), 1), _case((20, 18, 16), 2)]
+    ext0 = BatchedExtractor(schedule="static", prep="hint")
+    rows0, _ = ext0.run(good)
+
+    ext = BatchedExtractor(schedule="static", prep="hint")
+    rows, stats = ext.run([good[0], _poisoned(), good[1]])
+    assert _nan_row(rows[1]) and not _nan_row(rows[0]) and not _nan_row(rows[2])
+    assert stats["quarantined_cases"] == 1
+    assert "non-finite" in stats["errors"][1]
+    # the healthy cases are bit-identical to a run without the poison
+    np.testing.assert_array_equal(rows[0], rows0[0])
+    np.testing.assert_array_equal(rows[2], rows0[1])
+    # quarantine is pure host work: the sync-free submit invariants hold
+    assert ext.executor.transfer_log["prep"] == 0
+    assert ext.executor.transfer_log["pass1"] == 0
+
+
+def test_loader_error_quarantines_in_stream():
+    good = [_case((20, 18, 16), 1), _case((20, 18, 16), 2)]
+    ext0 = BatchedExtractor(schedule="static", prep="hint")
+    rows0, _ = ext0.run(good)
+
+    def dead_loader():
+        raise OSError("NFS mount went away")
+
+    ext = BatchedExtractor(schedule="static", prep="hint")
+    rows = list(ext.extract_stream([good[0], dead_loader, good[1]], window=2))
+    assert len(rows) == 3 and _nan_row(rows[1])
+    np.testing.assert_array_equal(rows[0], rows0[0])
+    np.testing.assert_array_equal(rows[2], rows0[1])
+
+
+def test_invalid_spacing_quarantines():
+    img, msk, _ = _case((20, 18, 16), 1)
+    ext = BatchedExtractor(schedule="static", prep="hint")
+    rows, stats = ext.run([(img, msk, (1.0, -1.0, 1.0))])
+    assert _nan_row(rows[0]) and "spacing" in stats["errors"][0]
+
+
+# ---------------------------------------------------------------------------
+# retry: transient collect faults re-submit bit-identically
+# ---------------------------------------------------------------------------
+
+
+def test_window_retry_is_bit_identical():
+    cases = [_case((20, 18, 16), s) for s in (1, 2, 4)]
+    ext0 = BatchedExtractor(schedule="static", prep="hint")
+    rows0, _ = ext0.run(cases)
+
+    fp = FaultPlan(seed=0, fail_windows=(0,))
+    fp.begin_window(0)  # arm the one-shot collect fault
+    ext = BatchedExtractor(
+        schedule="static", prep="hint", transfer_callback=fp.transfer_hook,
+        retry=RetryPolicy(max_retries=2, base_delay=0.001),
+    )
+    rows, stats = ext.run(cases)
+    assert ext.executor.window_retries == 1
+    assert stats["window_retries"] == 1
+    for r, r0 in zip(rows, rows0):
+        np.testing.assert_array_equal(r, r0)
+
+
+def test_retry_exhaustion_reraises():
+    def always_fail(stage, x):
+        if stage in COLLECT_STAGES:
+            raise InjectedFault(f"permanent fault at {stage}")
+
+    ext = BatchedExtractor(
+        schedule="static", prep="hint", transfer_callback=always_fail,
+        retry=RetryPolicy(max_retries=1, base_delay=0.001),
+    )
+    with pytest.raises(InjectedFault, match="permanent"):
+        ext.run([_case((20, 18, 16), 1)])
+    assert ext.executor.window_retries == 1
+
+
+def test_retry_policy_backoff_schedule():
+    p = RetryPolicy(base_delay=0.1, multiplier=3.0, max_delay=0.5)
+    assert p.delay(0) == pytest.approx(0.1)
+    assert p.delay(1) == pytest.approx(0.3)
+    assert p.delay(2) == pytest.approx(0.5)  # capped
+
+
+# ---------------------------------------------------------------------------
+# fault_tolerance: handler chaining, straggler warmup
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_handler_chains_and_restores():
+    calls = []
+    original = signal.getsignal(signal.SIGTERM)
+    try:
+        def outer(signum, frame):
+            calls.append(signum)
+
+        signal.signal(signal.SIGTERM, outer)
+        h = PreemptionHandler().install()
+        installed = signal.getsignal(signal.SIGTERM)
+        assert installed is not outer
+        h.install()  # idempotent: no self-chaining
+        assert signal.getsignal(signal.SIGTERM) is installed
+
+        installed(signal.SIGTERM, None)
+        assert h.requested and calls == [signal.SIGTERM]  # chained through
+
+        h.reset()
+        assert not h.requested
+        h.uninstall()
+        assert signal.getsignal(signal.SIGTERM) is outer  # restored exactly
+        h.uninstall()  # idempotent no-op
+        assert signal.getsignal(signal.SIGTERM) is outer
+    finally:
+        signal.signal(signal.SIGTERM, original)
+
+
+def test_straggler_warmup_swallows_cold_compile():
+    det = StragglerDetector(window=8, threshold=2.0, warmup=1, min_samples=2)
+    # the cold-compile outlier: not flagged AND kept out of the median
+    assert not det.observe(0, 10.0)
+    for i in range(1, 5):
+        assert not det.observe(i, 0.1)
+    assert det.median == pytest.approx(0.1)
+    assert det.observe(5, 1.0)  # a real straggler still trips
+    # default construction keeps the legacy contract (no warmup)
+    legacy = StragglerDetector(window=8, threshold=2.0)
+    assert legacy.warmup == 0 and legacy.min_samples is None
+
+
+# ---------------------------------------------------------------------------
+# THE acceptance test: kill mid-stream, resume, compare manifests
+# ---------------------------------------------------------------------------
+
+
+def _cases(n):
+    out = []
+    for i in range(n):
+        if i == 5:  # one poisoned case rides along mid-stream
+            out.append((f"case-{i:03d}",) + _poisoned(seed=50))
+        else:
+            out.append((f"case-{i:03d}",) + _case((20, 18, 16), 10 + i))
+    return out
+
+
+def _strip(rows):
+    # window ordinals restart on resume; everything else must match exactly
+    return sorted(
+        [{k: v for k, v in r.items() if k != "window"} for r in rows],
+        key=lambda r: r["id"],
+    )
+
+
+def test_preempt_resume_manifest_bit_identical(tmp_path):
+    n, window = 10, 4
+    cases = _cases(n)
+
+    # uninterrupted reference run
+    man_a = RunManifest(tmp_path / "a.jsonl")
+    rep_a = ResilientRunner(
+        BatchedExtractor(schedule="static", prep="hint"), man_a, window=window
+    ).run(cases)
+    assert rep_a.status == "complete" and rep_a.processed == n
+    assert rep_a.quarantined == 1  # the poisoned case, as an error row
+    windows_a = rep_a.windows
+
+    # preempted run: a REAL SIGTERM lands at case 9; drain_on_preempt=False
+    # models a hard kill -- the submitted in-flight window is abandoned
+    man_b = RunManifest(tmp_path / "b.jsonl")
+    ext1 = BatchedExtractor(schedule="static", prep="hint")
+    rep1 = ResilientRunner(
+        ext1, man_b, window=window,
+        fault_plan=FaultPlan(preempt_at_case=9), drain_on_preempt=False,
+    ).run(cases)
+    assert rep1.status == "preempted"
+    assert 0 < rep1.processed < n  # partial progress committed
+    man_b.close()
+
+    # resume into the same manifest (fresh process would do exactly this)
+    man_b2 = RunManifest(tmp_path / "b.jsonl")
+    ext2 = BatchedExtractor(schedule="static", prep="hint")
+    rep2 = ResilientRunner(ext2, man_b2, window=window).run(cases)
+    assert rep2.status == "complete"
+    assert rep2.skipped == rep1.processed  # the done-set skip
+    # quarantine + resume are pure host work: sync-free invariants hold
+    assert ext2.executor.transfer_log["prep"] == 0
+    assert ext2.executor.transfer_log["pass1"] == 0
+
+    # zero lost, zero duplicated ids
+    assert rep1.processed + rep2.processed == n
+    ids = [r["id"] for r in man_b2.rows()]
+    assert len(ids) == n == len(set(ids))
+
+    # at most ONE window of work is redone after the kill
+    assert rep1.windows + rep2.windows <= windows_a + 1
+
+    # record set bit-identical to the uninterrupted run's
+    assert _strip(man_b2.rows()) == _strip(RunManifest(tmp_path / "a.jsonl")
+                                           .__enter__().rows())
+    errs = [r for r in man_b2.rows() if r["status"] == "error"]
+    assert [e["name"] for e in errs] == ["case-005"]
+
+
+def test_resilient_runner_load_error_quarantined_and_stable(tmp_path):
+    cases = _cases(4)
+
+    def dead():
+        raise OSError("gone")
+
+    cases[2] = ("case-002", dead)
+    man = RunManifest(tmp_path / "m.jsonl")
+    rep = ResilientRunner(
+        BatchedExtractor(schedule="static", prep="hint"), man, window=2
+    ).run(cases)
+    assert rep.processed == 4 and rep.quarantined == 1
+    err = [r for r in man.rows() if r["status"] == "error"]
+    assert len(err) == 1 and err[0]["id"] == "case-002@2"
+    # a second pass re-quarantines idempotently (same id -> skip)
+    rep2 = ResilientRunner(
+        BatchedExtractor(schedule="static", prep="hint"), man, window=2
+    ).run(cases)
+    assert rep2.processed == 0 and rep2.skipped == 4
+
+
+def test_runner_rejects_non_integer_window(tmp_path):
+    with pytest.raises(ValueError, match="window"):
+        ResilientRunner(object(), RunManifest(tmp_path / "x.jsonl"),
+                        window="auto")
+
+
+def test_manifest_record_json_is_line_atomic(tmp_path):
+    # each record is exactly one line of valid JSON, sorted keys
+    man = RunManifest(tmp_path / "m.jsonl")
+    man.record("x", "done", features={"MeshVolume": 1.5}, window=3)
+    man.close()
+    (line,) = (tmp_path / "m.jsonl").read_text().splitlines()
+    rec = json.loads(line)
+    assert list(rec) == sorted(rec)
+    assert rec == {"id": "x", "status": "done",
+                   "features": {"MeshVolume": 1.5}, "window": 3}
