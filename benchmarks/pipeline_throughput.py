@@ -15,6 +15,13 @@ front-end (``extract_stream``, window overlap), and the fully
 self-configuring stream (``window='auto'``) -- and reports cases/second
 for each, the throughput story GPU/TPU acceleration exists to serve.
 
+PR 7 adds the feature-family rows: ``first_order_batch`` and
+``glcm_batch`` run each intensity family alone on the same windows, and
+``multi_family_batch`` runs shape+firstorder+glcm together; the
+multi-family rows are asserted bit-identical per ``plan.family_slices``
+slice against the shape-only and single-family runs before timing is
+reported, so the throughput rows double as a batch-scale parity gate.
+
 ``run(records=...)`` appends one dict per mode; ``benchmarks.run
 --json-pipeline`` serialises them as the ``BENCH_pipeline.json``
 perf-trajectory record (cases/sec per mode across PRs; the
@@ -30,6 +37,7 @@ import time
 import numpy as np
 
 from benchmarks.common import row
+from repro.core import plan as planlib
 from repro.core.pipeline import BatchedExtractor
 from repro.core.shape_features import ShapeFeatureExtractor
 from repro.data.synthetic import make_case
@@ -133,6 +141,30 @@ def run(n_cases: int = 12, records=None, repeat: int = 8):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     assert auto.executor.transfer_log.get("prep", 0) == 0
 
+    # feature families (PR 7): first-order / GLCM texture rows on the
+    # same sync-free windows.  Family launches ride inside the window
+    # (staged intensity shared by both), so their cost shows up as extra
+    # per-window work, not extra sync round-trips.
+    fo = BatchedExtractor(backend="ref", families="firstorder")
+    gl = BatchedExtractor(backend="ref", families="glcm")
+    multi = BatchedExtractor(
+        backend="ref", families=("shape", "firstorder", "glcm")
+    )
+    ((res_f, stats_f), (res_g, stats_g), (res_m, stats_m)) = _best_interleaved(
+        (fo, gl, multi), cases, max(2, repeat // 2)
+    )
+    # family parity at bench scale: the multi-family run's shape slice is
+    # bit-identical to the shape-only device rows (families never perturb
+    # the shape pipeline), and each intensity slice is bit-identical to
+    # the corresponding single-family run (host-side derivation makes the
+    # rows independent of which families ride along)
+    sl = planlib.family_slices(multi.families)
+    for m, d, f, g in zip(res_m, res_d, res_f, res_g):
+        np.testing.assert_array_equal(np.asarray(m)[sl["shape"]], np.asarray(d))
+        np.testing.assert_array_equal(np.asarray(m)[sl["firstorder"]],
+                                      np.asarray(f))
+        np.testing.assert_array_equal(np.asarray(m)[sl["glcm"]], np.asarray(g))
+
     def emit(name, seconds, stats=None, **extra):
         derived = dict(
             cases=n_cases, cases_per_s=f"{n_cases / seconds:.2f}", **extra
@@ -206,6 +238,24 @@ def run(n_cases: int = 12, records=None, repeat: int = 8):
         speedup_vs_loop=f"{t_loop / t_stream_auto:.2f}",
         speedup_vs_fixed_stream=f"{t_stream / t_stream_auto:.2f}",
         window="auto",
+    )
+    emit(
+        "first_order_batch", stats_f["seconds"], stats_f,
+        families="firstorder",
+        row_width=planlib.row_width(fo.families),
+        speedup_vs_loop=f"{t_loop / stats_f['seconds']:.2f}",
+    )
+    emit(
+        "glcm_batch", stats_g["seconds"], stats_g,
+        families="glcm",
+        row_width=planlib.row_width(gl.families),
+        speedup_vs_loop=f"{t_loop / stats_g['seconds']:.2f}",
+    )
+    emit(
+        "multi_family_batch", stats_m["seconds"], stats_m,
+        families="shape+firstorder+glcm",
+        row_width=planlib.row_width(multi.families),
+        vs_shape_only=f"{stats_m['seconds'] / stats_d['seconds']:.2f}",
     )
     return rows
 

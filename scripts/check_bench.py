@@ -16,7 +16,14 @@ pass (there is nothing to compare), rows that disappeared are reported
 as a warning (a silently dropped bench mode should be loud), and a
 missing baseline (first commit, renamed file, no git) skips the gate
 with a notice rather than failing -- the gate guards trajectories, it
-does not invent them.
+does not invent them.  Any OTHER baseline-lookup failure (an unreadable
+object, a corrupt committed record) FAILS the gate: a gate that skips on
+unexpected errors is a gate that silently stops gating.
+
+The baseline path is resolved REPO-RELATIVE before ``git show`` (via
+``git rev-parse --show-toplevel``), so the gate works from any working
+directory and with absolute fresh-record paths -- ``git show REF:path``
+itself only understands paths rooted at the repo top level.
 
 Usage (what ci_smoke.sh stage 'bench_gate' runs):
 
@@ -27,6 +34,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import subprocess
 import sys
 
@@ -36,28 +44,81 @@ METRICS = {
     "diameter": ("us_per_call", False),
 }
 
+# git-show stderr fragments that mean "this baseline legitimately does
+# not exist" (first commit, renamed/never-committed file, bad ref on a
+# fresh clone) -- the documented skip cases.  Anything else is an error.
+_MISSING_MARKERS = (
+    "does not exist",
+    "exists on disk, but not in",
+    "unknown revision",
+    "bad revision",
+    "invalid object name",
+    "not a valid object name",
+)
+
 
 def load_fresh(path: str) -> dict:
     with open(path) as f:
         return json.load(f)
 
 
-def load_baseline(path: str, ref: str) -> dict | None:
-    """The committed record at ``ref`` (None when unavailable)."""
+def _repo_relative(path: str) -> tuple[str, str] | None:
+    """``(repo_top, path relative to it)`` (None when not in a repo).
+
+    ``git show REF:path`` resolves paths against the repo ROOT, not the
+    current directory, so a gate run from a subdirectory (or handed an
+    absolute path) must translate first.  The repo is discovered from
+    the RECORD's directory, not the gate's cwd: the fresh record sits
+    next to its committed baseline.
+    """
+    anchor = os.path.dirname(os.path.abspath(path)) or "."
     try:
         proc = subprocess.run(
-            ["git", "show", f"{ref}:{path}"],
+            ["git", "-C", anchor, "rev-parse", "--show-toplevel"],
             capture_output=True, text=True, timeout=60,
         )
     except (OSError, subprocess.TimeoutExpired):
         return None
     if proc.returncode != 0:
         return None
+    top = proc.stdout.strip()
+    rel = os.path.relpath(os.path.abspath(path), top)
+    if rel.startswith(".."):
+        return None  # outside the repo: nothing committed to compare to
+    return top, rel.replace(os.sep, "/")
+
+
+def load_baseline(path: str, ref: str):
+    """The committed record at ``ref`` as ``(data, skip_reason, error)``.
+
+    Exactly one of the three is non-None: ``data`` on success,
+    ``skip_reason`` when no baseline legitimately exists (gate skips with
+    a notice), ``error`` on any other lookup failure (gate FAILS).
+    """
+    located = _repo_relative(path)
+    if located is None:
+        return None, f"{path} is not inside a git repository", None
+    top, rel = located
+    try:
+        proc = subprocess.run(
+            ["git", "-C", top, "show", f"{ref}:{rel}"],
+            capture_output=True, text=True, timeout=60,
+        )
+    except (OSError, subprocess.TimeoutExpired) as e:
+        return None, f"git unavailable ({e})", None
+    if proc.returncode != 0:
+        detail = proc.stderr.strip().splitlines()
+        detail = detail[0] if detail else f"git show exited {proc.returncode}"
+        if any(m in detail.lower() for m in _MISSING_MARKERS):
+            return None, f"no committed baseline at {ref}:{rel} ({detail})", None
+        return None, None, f"baseline lookup {ref}:{rel} failed: {detail}"
     try:
         data = json.loads(proc.stdout)
-    except ValueError:
-        return None
-    return data if isinstance(data, dict) else None
+    except ValueError as e:
+        return None, None, f"committed baseline {ref}:{rel} is not JSON ({e})"
+    if not isinstance(data, dict):
+        return None, None, f"committed baseline {ref}:{rel} is not a record"
+    return data, None, None
 
 
 def check_record(label: str, fresh: dict, baseline: dict,
@@ -128,10 +189,13 @@ def main(argv=None) -> int:
             print(f"{label}: fresh record {path} unreadable ({e})")
             failures.append(f"{label}: fresh record unreadable")
             continue
-        baseline = load_baseline(path, args.ref)
+        baseline, skip, error = load_baseline(path, args.ref)
+        if error is not None:
+            print(f"{label}: {error}")
+            failures.append(f"{label}: {error}")
+            continue
         if baseline is None:
-            print(f"{label}: no committed baseline at {args.ref}:{path}; "
-                  "skipping (nothing to regress against)")
+            print(f"{label}: {skip}; skipping (nothing to regress against)")
             continue
         print(f"{label}: fresh {path} vs {args.ref}:{path}")
         failures += check_record(label, fresh, baseline, args.threshold)

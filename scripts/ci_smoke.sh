@@ -54,13 +54,23 @@ stage resilience python -m pytest -q -m tier1 \
     tests/test_resilience.py \
     tests/test_checkpoint.py
 
+# 5) feature-family gates: first-order/GLCM ref==pallas parity (bitwise /
+#    integer-exact), batched==single, the sync-free family drain on the
+#    plan/executor windows, the NIfTI loader quirks (scl scaling, 4D
+#    squeeze, big-endian refusal), and the bench-gate failure-mode
+#    contracts
+stage families python -m pytest -q -m tier1 \
+    tests/test_features_families.py \
+    tests/test_nifti.py \
+    tests/test_check_bench.py
+
 if [[ "${SMOKE_SKIP_BENCH:-0}" != "1" ]]; then
-  # 5) kernel-wiring smoke: Fig.1 variant sweep (interpret mode) + the
+  # 6) kernel-wiring smoke: Fig.1 variant sweep (interpret mode) + the
   #    BENCH_diameter.json perf-trajectory record
   stage bench_diameter python -m benchmarks.run --only fig1 --json BENCH_diameter.json
   test -s BENCH_diameter.json
 
-  # 6) batched-throughput smoke: the pipeline mode ladder (single loop ->
+  # 7) batched-throughput smoke: the pipeline mode ladder (single loop ->
   #    streaming auto) plus the ~200-case faulted/preempted/resumed soak
   #    (SOAK_CASES), recorded as the BENCH_pipeline.json trajectory, then
   #    gated against the committed trajectory (>30% cases/s or us/call

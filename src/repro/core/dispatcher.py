@@ -92,6 +92,44 @@ def compact_config(backend: str, bucket: int, block="auto",
     return autotune.get_compact_config(int(bucket), backend, batch=batch).block
 
 
+def firstorder_config(backend: str, shape, block="auto",
+                      batch: int = 1) -> int:
+    """Resolve the first-order reduction block for a padded-volume bucket.
+
+    ``block='auto'`` consults the ``firstorder/<backend>`` autotune-cache
+    namespace for the (volume bucket, batch-depth bucket) pair; explicit
+    values pass through.  For the 'ref' backend the choice is moot and
+    the default is returned.  May run a measuring sweep, so call it
+    OUTSIDE any traced function.
+    """
+    from repro.runtime import autotune  # local import: avoid cycle
+
+    if block is not None and block != "auto":
+        return int(block)
+    if backend == "ref":
+        return autotune.DEFAULT_FIRSTORDER_CONFIG.block
+    return autotune.get_family_config(
+        "firstorder", autotune.mc_shape_bucket(shape), backend, batch=batch
+    ).block
+
+
+def glcm_config(backend: str, shape, block="auto", batch: int = 1) -> int:
+    """Resolve the GLCM pair-scatter block for a padded-volume bucket.
+
+    Same contract as :func:`firstorder_config`, against the
+    ``glcm/<backend>`` autotune-cache namespace.
+    """
+    from repro.runtime import autotune  # local import: avoid cycle
+
+    if block is not None and block != "auto":
+        return int(block)
+    if backend == "ref":
+        return autotune.DEFAULT_GLCM_CONFIG.block
+    return autotune.get_family_config(
+        "glcm", autotune.mc_shape_bucket(shape), backend, batch=batch
+    ).block
+
+
 def sync_cost(backend: str, cache=None) -> float:
     """Resolve the modeled per-fetch d2h latency (microseconds).
 

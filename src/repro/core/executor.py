@@ -64,6 +64,20 @@ instead of killing the window (``_prep_case_safe``), and a ``retry``
 policy turns a collect-time fault into a backed-off ``resubmit_window``
 + re-drain -- both pure host-side mechanisms that leave the sync-free
 submit path's zero-fetch invariants untouched.
+
+Feature families (PR 7, ``core/plan.FAMILIES``): the executor extracts
+any requested subset of the registered families.  The intensity families
+(first-order, GLCM) ride the same windows as the shape passes: pass 0
+stages each case's cropped, bucket-padded intensity volume ONCE
+alongside its mask, the per-shape-bucket intensity pools are built once
+and SHARED by every intensity family, and one batched family launch per
+(family, shape bucket) is submitted inside the same submit phase -- no
+new host fetch happens before collect, so the sync-free invariants
+(zero pass-0/pass-1 fetches under hint prep + static schedule) hold
+unchanged with families enabled (tier-1-locked).  Feature rows are the
+family-order concatenation ``plan.row_width(families)`` wide; quarantine
+NaN rows and empty-mask zero rows derive their width from the same
+registry, never from a hardcoded constant.
 """
 from __future__ import annotations
 
@@ -99,6 +113,8 @@ class _Prepped:
     """
 
     mask: object | None = None  # device-staged bucket-padded mask
+    image: object | None = None  # device-staged bucket-padded intensity
+    # volume (same crop/pad as the mask); None unless a family needs it
     spacing: np.ndarray | None = None
     shape: tuple | None = None  # padded shape bucket (MC group key)
     roi_shape: tuple | None = None  # pre-pad cropped shape (pad stats)
@@ -124,6 +140,8 @@ class _Window:
     fused_futs: list
     static_aux: list  # [(cap, idxs, counts_fut, verts, masks)] to resolve
     t_prune: float
+    family_futs: dict = dataclasses.field(default_factory=dict)
+    # {family: [(idxs, future)]} -- the intensity-family launches
 
 
 @jax.jit
@@ -162,7 +180,9 @@ class PlanExecutor:
     ``BatchedExtractor`` is the public facade.
     """
 
-    N_FEATURES = 7  # [vol, area, d3, dxy, dxz, dyz, n_vertices]
+    N_FEATURES = 7  # the shape-family (default request) row width:
+    # [vol, area, d3, dxy, dxz, dyz, n_vertices].  Per-instance widths
+    # come from the family registry: see ``self.n_features``.
 
     SCHEDULES = (*planlib.SCHEDULES, "auto")
     PREPS = ("count", "hint")
@@ -173,9 +193,15 @@ class PlanExecutor:
                  k_dirs: int = 16, device_compact: bool = True,
                  compact_block="auto", schedule: str = "counted",
                  prep: str = "count", cost_model=None,
-                 transfer_callback=None, retry=None):
+                 transfer_callback=None, retry=None,
+                 families=None, n_bins: int = 32):
         self.backend = dispatcher.resolve_backend(backend)
         self.variant = variant
+        self.families = planlib.resolve_families(families)
+        self.n_features = planlib.row_width(self.families)
+        self.n_bins = int(n_bins)
+        self._shape_on = "shape" in self.families
+        self._needs_intensity = planlib.needs_intensity(self.families)
         if mesh is None:
             # adopt the ambient use_mesh mesh only when it can actually
             # shard the batch: train/serve meshes without a data axis must
@@ -268,6 +294,14 @@ class PlanExecutor:
         return dispatcher.compact_config(
             self.backend, cap_in, self.compact_block, batch=depth
         )
+
+    def _resolve_family_block(self, family: str, shape, depth: int = 1):
+        """Tuned block for an intensity-family launch (None on 'ref')."""
+        if self.backend == "ref":
+            return None
+        resolver = (dispatcher.firstorder_config if family == "firstorder"
+                    else dispatcher.glcm_config)
+        return resolver(self.backend, shape, "auto", batch=depth)
 
     # -- compiled-function cache -------------------------------------------
 
@@ -400,6 +434,36 @@ class PlanExecutor:
         self._compiled[key] = fn
         return fn
 
+    def _family_fn(self, family: str):
+        """Compile-key resolver for one intensity family's batched launch.
+
+        Returns the ``fn_for_key`` shape :meth:`_submit` expects: per
+        (padded-volume bucket, depth) one sharded jitted function mapping
+        the pooled (images, masks) stacks to per-case DEVICE payloads --
+        packed stats rows (firstorder) or count matrices (glcm).  Feature
+        rows finalise host-side at drain time (:meth:`_family_row`); only
+        the payloads need cross-backend parity.  The tuned block resolves
+        OUTSIDE the trace, exactly like the shape passes' configs.
+        """
+        def fn_for_key(shape, depth):
+            key = (family, shape, depth)
+            if key in self._compiled:
+                return self._compiled[key]
+            backend, n_bins = self.backend, self.n_bins
+            block = self._resolve_family_block(family, shape, depth)
+            op = (ops.firstorder_packed_batch if family == "firstorder"
+                  else ops.glcm_matrix_batch)
+
+            def batch(images, masks):
+                return op(images, masks, backend=backend, n_bins=n_bins,
+                          block=block)
+
+            fn = self._dp_map(batch, check=False)
+            self._compiled[key] = fn
+            return fn
+
+        return fn_for_key
+
     def _diam_fn(self, cap, depth: int):
         """Pass 2b: batched diameter sweep for one (pruned) vertex bucket."""
         key = ("diam", cap, depth)
@@ -491,6 +555,46 @@ class PlanExecutor:
             jnp.asarray(np.stack([prepped[i].spacing for i in idxs])),
         )
 
+    def _ipool(self, prepped, idxs):
+        """Intensity device pool for one shape group: (images, masks).
+
+        Built once per shape group at submit and shared by EVERY
+        intensity family of the window -- the staged per-case volumes are
+        stacked on device, never re-transferred per family.
+        """
+        return (
+            jnp.stack([prepped[i].image for i in idxs]),
+            jnp.stack([prepped[i].mask for i in idxs]),
+        )
+
+    def _submit_families(self, plan, prepped, batch_size=None) -> dict:
+        """Submit the intensity-family launches for one planned window.
+
+        One launch chain per (family, shape bucket), every launch queued
+        before anything is drained -- the families ride the same
+        submit/collect window as the shape passes and add NO host fetch
+        before collect (the sync-free invariants hold unchanged;
+        tier-1-locked).
+        """
+        families = [f for f in plan.families if f != "shape"]
+        if not families:
+            return {}
+        pools = {
+            shape: self._ipool(prepped, idxs)
+            for shape, idxs in plan.shape_groups.items()
+        }
+        futs = {}
+        for family in families:
+            entries = [
+                (shape, idxs, pools[shape])
+                for shape, idxs in plan.shape_groups.items()
+            ]
+            futs[family] = self._submit(
+                entries, self._family_fn(family), self._stacked_chunk,
+                batch_size,
+            )
+        return futs
+
     # -- pass 0: prep + device staging --------------------------------------
 
     def _prep_case(self, image, mask, spacing, fields: bool = True,
@@ -514,15 +618,35 @@ class PlanExecutor:
         sp = np.asarray(spacing, np.float32)
         if not np.any(mask):
             return _Prepped(spacing=sp)  # empty mask: all-zero feature row
-        _, m, _ = crop_to_roi(image, mask)
+        if self._needs_intensity:
+            img = None if image is None else np.asarray(image)
+            if img is None or img.shape != np.shape(mask):
+                raise ValueError(
+                    "intensity families requested but the case has no "
+                    "matching intensity image"
+                )
+            if (np.issubdtype(img.dtype, np.floating)
+                    and not np.isfinite(img).all()):
+                raise ValueError("non-finite intensity image (poisoned case)")
+        if image is None:  # shape-only requests never read the image
+            image = np.zeros_like(np.asarray(mask), dtype=np.float32)
+        im, m, _ = crop_to_roi(image, mask)
         roi_shape = m.shape
         bshape = planlib.shape_bucket(tuple(s - 2 for s in roi_shape))
         pad = [(0, bs - ms) for bs, ms in zip(bshape, roi_shape)]
         mdev = jnp.asarray(np.pad(m, pad))  # staged once; pool entry
+        idev = (jnp.asarray(np.pad(im, pad)) if self._needs_intensity
+                else None)  # staged once; shared by every intensity family
+        if not self._shape_on:
+            # intensity-only request: no vertex stage runs at all -- the
+            # shape bucket still keys the family launches
+            return _Prepped(mask=mdev, image=idev, spacing=sp, shape=bshape,
+                            roi_shape=roi_shape)
         if not fields:
             hint = planlib.vertex_hint(tuple(s - 2 for s in roi_shape), sp)
             return _Prepped(
-                mask=mdev, spacing=sp, shape=bshape, roi_shape=roi_shape,
+                mask=mdev, image=idev, spacing=sp, shape=bshape,
+                roi_shape=roi_shape,
                 n_vertices=hint,  # pad-waste census only (the fused kernel
                 vertex_cap=ops.vertex_bucket(hint),  # recounts for the row)
             )
@@ -537,9 +661,9 @@ class PlanExecutor:
             cap = ops.vertex_bucket(hint)
             verts, vmask = _compact_cap(f, cap)
             return _Prepped(
-                mask=mdev, spacing=sp, shape=bshape, roi_shape=roi_shape,
-                verts=verts, vmask=vmask, n_vertices=hint, vertex_cap=cap,
-                n_fut=n, prep_cap=cap,
+                mask=mdev, image=idev, spacing=sp, shape=bshape,
+                roi_shape=roi_shape, verts=verts, vmask=vmask,
+                n_vertices=hint, vertex_cap=cap, n_fut=n, prep_cap=cap,
             )
         n = int(self._fetch("prep", n))
         cap = ops.vertex_bucket(n)
@@ -548,8 +672,9 @@ class PlanExecutor:
             verts = self._fetch("prep", verts)
             vmask = self._fetch("prep", vmask)
         return _Prepped(
-            mask=mdev, spacing=sp, shape=bshape, roi_shape=roi_shape,
-            verts=verts, vmask=vmask, n_vertices=n, vertex_cap=cap,
+            mask=mdev, image=idev, spacing=sp, shape=bshape,
+            roi_shape=roi_shape, verts=verts, vmask=vmask, n_vertices=n,
+            vertex_cap=cap,
         )
 
     def _prep_case_safe(self, case, fields: bool = True,
@@ -587,7 +712,8 @@ class PlanExecutor:
     def _meta(self, p: _Prepped) -> planlib.CaseMeta:
         if p.mask is None:
             return planlib.CaseMeta(None, None, 0, 0)
-        return planlib.CaseMeta(p.shape, p.roi_shape, p.vertex_cap, p.n_vertices)
+        return planlib.CaseMeta(p.shape, p.roi_shape, p.vertex_cap,
+                                p.n_vertices, intensity=p.image is not None)
 
     # -- pass 1 --------------------------------------------------------------
 
@@ -805,10 +931,15 @@ class PlanExecutor:
         schedule = self.schedule
         if schedule == "auto":
             schedule = self.cost_model.choose_schedule(metas)
-        plan = planlib.build_plan(metas, schedule)
+        plan = planlib.build_plan(metas, schedule, families=self.families)
+        family_futs = self._submit_families(plan, prepped, batch_size)
 
         mc_futs, diam_futs, fused_futs, aux = [], [], [], []
         t_prune = 0.0
+        if not self._shape_on:
+            # intensity-only request: the family launches are the window
+            return _Window(prepped, plan, mc_futs, diam_futs, fused_futs,
+                           aux, t_prune, family_futs)
         if not self.prune:
             fused_entries = [
                 (bucket, idxs, self._pool(prepped, idxs))
@@ -818,7 +949,7 @@ class PlanExecutor:
                 fused_entries, self._batch_fn, self._stacked_chunk, batch_size
             )
             return _Window(prepped, plan, mc_futs, diam_futs, fused_futs,
-                           aux, t_prune)
+                           aux, t_prune, family_futs)
 
         # pass 1
         t1 = time.perf_counter()
@@ -856,7 +987,8 @@ class PlanExecutor:
                 self._host_chunk(lambda i: (prepped[i].verts, prepped[i].vmask)),
                 batch_size,
             )
-        return _Window(prepped, plan, mc_futs, diam_futs, [], aux, t_prune)
+        return _Window(prepped, plan, mc_futs, diam_futs, [], aux, t_prune,
+                       family_futs)
 
     def resubmit_window(self, window: _Window) -> _Window:
         """Idempotently re-submit a window from its prepped device state.
@@ -915,15 +1047,26 @@ class PlanExecutor:
 
     def _collect_window(self, window: _Window):
         prepped = window.prepped
+        # intensity families drain first (they were submitted first);
+        # stage names match the family names so transfer_log keeps a
+        # per-family sync census and the shape stages' counts are
+        # untouched by enabling families
+        fam_out = {
+            family: self._drain(futs, family)
+            for family, futs in window.family_futs.items()
+        }
+
         if window.fused_futs:  # legacy one-pass path
             out = self._drain(window.fused_futs, "pass2")
             rows = [
                 self._degenerate_row(p) if p.mask is None
-                else np.asarray(out[i], np.float32)
+                else self._assemble_row(i, p, np.asarray(out[i], np.float32),
+                                        fam_out)
                 for i, p in enumerate(prepped)
             ]
             return rows, self._window_stats(window)
 
+        shape_on = self._shape_on
         mc_out = self._drain(window.mc_futs, "pass2a")
         d_out = self._drain(window.diam_futs, "pass2b")
         if window.static_aux:
@@ -938,28 +1081,61 @@ class PlanExecutor:
             if p.mask is None:
                 rows.append(self._degenerate_row(p))
                 continue
-            rows.append(
-                np.concatenate(
+            shape_row = None
+            if shape_on:
+                shape_row = np.concatenate(
                     [np.asarray(mc_out[i], np.float32),
                      np.asarray(d_out[i], np.float32),
                      np.asarray([p.n_vertices], np.float32)]
                 )
-            )
+            rows.append(self._assemble_row(i, p, shape_row, fam_out))
         return rows, self._window_stats(window)
+
+    def _family_row(self, family: str, payload) -> np.ndarray:
+        """Finalise one case's fetched device payload into a feature row.
+
+        The shared host-side derivations (numpy, deterministic): packed
+        stats -> 9 first-order features, count matrix -> 4 Haralick
+        features.  Kept out of the traced launches so batched and
+        single-case rows stay bit-identical (see kernels/firstorder.py).
+        """
+        if family == "firstorder":
+            from repro.kernels import firstorder as _fo
+
+            return _fo.features_from_packed_np(payload, self.n_bins)
+        from repro.kernels import glcm as _glcm
+
+        return _glcm.glcm_features_from_matrix_np(payload, self.n_bins)
+
+    def _assemble_row(self, i, p, shape_row, fam_out) -> np.ndarray:
+        """Concatenate one case's family parts in canonical family order."""
+        parts = []
+        for family in self.families:
+            if family == "shape":
+                parts.append(shape_row)
+            else:
+                parts.append(self._family_row(family, fam_out[family][i]))
+        if len(parts) == 1:
+            return parts[0]
+        return np.concatenate(parts)
 
     def _degenerate_row(self, p: _Prepped) -> np.ndarray:
         """Row for a case that ran no launches: zeros (empty mask, the
         degenerate-segmentation contract) or NaNs (quarantined -- the
         row-level error record; the message rides the window stats)."""
+        # width derives from the RESOLVED family set, not the shape-only
+        # class constant -- a quarantined case in a multi-family run must
+        # produce a full-width NaN row or np.stack on the results breaks
         if p.error is not None:
-            return np.full(self.N_FEATURES, np.nan, np.float32)
-        return np.zeros(self.N_FEATURES, np.float32)
+            return np.full(self.n_features, np.nan, np.float32)
+        return np.zeros(self.n_features, np.float32)
 
     def _window_stats(self, window: _Window) -> dict:
         prepped = window.prepped
         infos = [p.prune_info for p in prepped if p.prune_info is not None]
         pruned = [inf for inf in infos if inf.pruned]
         return {
+            "families": list(self.families),
             "buckets": len(window.plan.shape_groups),
             "vertex_buckets": len(
                 {p.vertex_cap for p in prepped if p.vertex_cap}
@@ -985,7 +1161,10 @@ class PlanExecutor:
     def run(self, cases: Sequence, batch_size: int | None = None):
         """Extract features for (image, mask, spacing) cases (one window).
 
-        Returns a list of (7,) rows in input order plus throughput stats.
+        Returns a list of ``(row_width(families),)`` rows in input order
+        plus throughput stats -- (7,) for the default shape-only request,
+        wider when intensity families are enabled (``plan.family_slices``
+        maps each family to its columns).
         """
         t0 = time.perf_counter()
         fetches0 = dict(self.transfer_log)
@@ -1099,27 +1278,47 @@ class PlanExecutor:
         """Single-case pruned path: the batched pipeline's parity oracle.
 
         Runs the identical stages (same bucket padding, pruning, tuned
-        configs, kernels) without any batching; returns a (7,) row.  An
+        configs, kernels) without any batching; returns a
+        ``(row_width(families),)`` row -- (7,) for the default shape-only
+        request.  Intensity families run at batch depth 1 through the
+        same ``ops`` entry points as the batched pipeline (canonical-chunk
+        contract: B=1 rows are bit-identical to any batched depth).  An
         empty mask yields zeros, matching the batched contract.  Always
         count-sized: the oracle is the baseline the hint prep must match.
         """
         p = self._prep_case(image, mask, spacing, prep="count")
         if p.mask is None:
-            return np.zeros(self.N_FEATURES, np.float32)
-        if self.prune:
-            p.verts, p.vmask, p.prune_info = ops.prune_candidates(
-                p.verts, p.vmask, k_dirs=self.k_dirs
-            )
-        mc_block, mc_chunk = self._resolve_mc(p.shape)
-        mc_kw = {} if mc_block is None else {"block": mc_block, "chunk": mc_chunk}
-        vol, area = ops.mc_volume_area(
-            p.mask, 0.5, p.spacing, backend=self.backend, **mc_kw
-        )
-        variant, block = self._resolve_diameter(len(p.verts))
-        d = ops.max_diameters(
-            p.verts, p.vmask, backend=self.backend, variant=variant, block=block
-        )
-        return np.concatenate(
-            [np.asarray([vol, area], np.float32), np.asarray(d, np.float32),
-             np.asarray([p.n_vertices], np.float32)]
-        )
+            return np.zeros(self.n_features, np.float32)
+        parts = []
+        for family in self.families:
+            if family == "shape":
+                if self.prune:
+                    p.verts, p.vmask, p.prune_info = ops.prune_candidates(
+                        p.verts, p.vmask, k_dirs=self.k_dirs
+                    )
+                mc_block, mc_chunk = self._resolve_mc(p.shape)
+                mc_kw = ({} if mc_block is None
+                         else {"block": mc_block, "chunk": mc_chunk})
+                vol, area = ops.mc_volume_area(
+                    p.mask, 0.5, p.spacing, backend=self.backend, **mc_kw
+                )
+                variant, block = self._resolve_diameter(len(p.verts))
+                d = ops.max_diameters(
+                    p.verts, p.vmask, backend=self.backend, variant=variant,
+                    block=block
+                )
+                parts.append(np.concatenate(
+                    [np.asarray([vol, area], np.float32),
+                     np.asarray(d, np.float32),
+                     np.asarray([p.n_vertices], np.float32)]
+                ))
+                continue
+            blk = self._resolve_family_block(family, p.shape)
+            op = (ops.firstorder_packed_batch if family == "firstorder"
+                  else ops.glcm_matrix_batch)
+            r = op(p.image[None], p.mask[None], backend=self.backend,
+                   n_bins=self.n_bins, block=blk)
+            parts.append(self._family_row(family, self._fetch(family, r)[0]))
+        if len(parts) == 1:
+            return parts[0]
+        return np.concatenate(parts)

@@ -71,6 +71,29 @@ Front-ends:
 * ``extract_one`` -- the single-case parity oracle: identical stages,
   no batching; batching may never change a feature value (tier-1).
 
+Feature families (PR 7) -- the multi-family registry
+(``plan.FAMILIES``): a feature row is the canonical-order concatenation
+of the requested families' parts, selected with ``families=``:
+
+* ``'shape'`` (default) -- the 7 mesh features above (MC volume/area,
+  diameters, vertex count);
+* ``'firstorder'`` -- 9 intensity statistics (``kernels/firstorder``):
+  the case's IMAGE volume rides pass 0 to the device next to its mask,
+  and one batched stats launch per shape bucket joins the submit window
+  (sync-free: it drains with its own ``'firstorder'`` transfer stage,
+  never adding a prep/pass-1 sync);
+* ``'glcm'`` -- 4 Haralick texture features (``kernels/glcm``) off the
+  same staged intensity pool (one matrix launch per bucket, its own
+  ``'glcm'`` drain stage).
+
+Each family ships a reference oracle and a Pallas kernel with a locked
+parity contract (first-order: bitwise via the canonical-chunk fold;
+GLCM: integer-exact count matrices), and an ``<family>/<backend>``
+autotune namespace for its launch block.  Row layout is a pure function
+of the requested set (``plan.family_slices`` / ``plan.feature_names``);
+batched, streamed, and single-case extraction stay bit-identical per
+family.  Quarantined cases degrade to full-width NaN rows.
+
 Legacy paths kept as parity baselines: ``prune=False`` (one-pass fused
 pipeline), ``device_compact=False`` (PR 2 host-side compaction).
 Empty-mask cases yield all-zero rows instead of raising: a 40k-case
@@ -138,7 +161,11 @@ class BatchedExtractor:
     ambient ``parallel.sharding.use_mesh`` context.  ``retry`` takes a
     ``runtime/resilience.RetryPolicy`` for backed-off per-window retry;
     failed/poisoned cases quarantine as NaN rows (see the module
-    docstring's Resilience section).
+    docstring's Resilience section).  ``families`` selects the feature
+    families (name, sequence of names, or None for shape-only; see the
+    module docstring) and sets the row width ``self.n_features``;
+    ``n_bins`` is the intensity discretisation the firstorder/glcm
+    families share.
     """
 
     N_FEATURES = PlanExecutor.N_FEATURES
@@ -148,15 +175,19 @@ class BatchedExtractor:
                  mc_block="auto", mc_chunk: int | None = None,
                  k_dirs: int = 16, device_compact: bool = True,
                  compact_block="auto", schedule: str = "counted",
-                 prep: str = "count", transfer_callback=None, retry=None):
+                 prep: str = "count", transfer_callback=None, retry=None,
+                 families=None, n_bins: int = 32):
         self.executor = PlanExecutor(
             backend=backend, variant=variant, mesh=mesh, data_axis=data_axis,
             prune=prune, mc_block=mc_block, mc_chunk=mc_chunk, k_dirs=k_dirs,
             device_compact=device_compact, compact_block=compact_block,
             schedule=schedule, prep=prep, transfer_callback=transfer_callback,
-            retry=retry,
+            retry=retry, families=families, n_bins=n_bins,
         )
         ex = self.executor
+        self.families = ex.families
+        self.n_features = ex.n_features
+        self.n_bins = ex.n_bins
         self.backend = ex.backend
         self.variant = ex.variant
         self.mesh = ex.mesh
@@ -174,7 +205,8 @@ class BatchedExtractor:
     def run(self, cases: Sequence, batch_size: int | None = None):
         """Extract features for (image, mask, spacing) cases (one window).
 
-        Returns a list of (7,) arrays in input order plus throughput stats.
+        Returns a list of ``(self.n_features,)`` arrays in input order
+        plus throughput stats ((7,) for the default shape-only request).
         """
         return self.executor.run(cases, batch_size)
 

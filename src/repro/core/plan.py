@@ -37,6 +37,18 @@ planes per unit of physical surface), memoised (the hint for a repeated
 ROI shape is computed once per process, not per case), and capped at the
 volume's total edge count so a degenerate estimate can never allocate a
 cap group past what the mesh could physically produce.
+
+Feature-family registry (PR 7): shape is one family of several.  A
+:class:`FamilySpec` declares everything the planner and executor need to
+schedule a family as a first-class stage -- its feature-row columns (and
+therefore its width), whether it consumes the intensity volume, and the
+autotune-cache namespace its kernel configurations live under.  A plan
+carries the resolved family tuple (:func:`resolve_families`: validated,
+canonical registry order, so the row layout is deterministic regardless
+of request order), and :func:`row_width` / :func:`family_slices` are the
+single source of the feature-row layout -- the quarantine NaN row, the
+manifest column names, and every collector concatenation derive from
+them instead of hardcoding a width.
 """
 from __future__ import annotations
 
@@ -150,6 +162,112 @@ def group_indices(keys: Sequence) -> dict:
 
 
 @dataclasses.dataclass(frozen=True)
+class FamilySpec:
+    """Everything the planner/executor need to schedule one feature family.
+
+    ``features`` fixes the family's feature-row columns (and width);
+    ``needs_intensity`` tells prep whether the case must stage an
+    intensity volume alongside the mask; ``cache_ns`` is the autotune
+    namespace the family's kernel configurations are swept/cached under
+    (``<cache_ns>/<backend>/...`` keys -- see ``runtime/autotune``).
+    """
+
+    name: str
+    features: tuple
+    needs_intensity: bool
+    cache_ns: str
+
+    @property
+    def n_features(self) -> int:
+        return len(self.features)
+
+
+#: Registry order is canonical row order: shape columns always precede
+#: first-order columns precede GLCM columns in a multi-family row.
+FAMILIES: dict = {
+    "shape": FamilySpec(
+        name="shape",
+        features=(
+            "MeshVolume", "SurfaceArea", "Maximum3DDiameter",
+            "Maximum2DDiameterSlice", "Maximum2DDiameterRow",
+            "Maximum2DDiameterColumn", "n_vertices",
+        ),
+        needs_intensity=False,
+        cache_ns="diameter",  # the shape passes predate the registry; their
+        # configs live in the diameter/mc/compact namespaces
+    ),
+    "firstorder": FamilySpec(
+        name="firstorder",
+        features=(
+            "Mean", "StdDev", "Minimum", "Maximum", "Percentile10",
+            "Median", "Percentile90", "Energy", "Entropy",
+        ),
+        needs_intensity=True,
+        cache_ns="firstorder",
+    ),
+    "glcm": FamilySpec(
+        name="glcm",
+        features=("Contrast", "Correlation", "Idm", "JointEnergy"),
+        needs_intensity=True,
+        cache_ns="glcm",
+    ),
+}
+
+DEFAULT_FAMILIES = ("shape",)
+
+
+def resolve_families(families=None) -> tuple:
+    """Validate a family request and return it in canonical registry order.
+
+    Canonicalising here makes the feature-row layout deterministic
+    regardless of request order -- ``("glcm", "shape")`` and
+    ``("shape", "glcm")`` produce identical rows.
+    """
+    if families is None:
+        return DEFAULT_FAMILIES
+    if isinstance(families, str):
+        families = (families,)
+    requested = set()
+    for f in families:
+        if f not in FAMILIES:
+            raise ValueError(
+                f"unknown feature family {f!r}; registered families: "
+                f"{tuple(FAMILIES)}"
+            )
+        requested.add(f)
+    if not requested:
+        raise ValueError("at least one feature family is required")
+    return tuple(f for f in FAMILIES if f in requested)
+
+
+def row_width(families=DEFAULT_FAMILIES) -> int:
+    """Total feature-row width for a family request."""
+    return sum(FAMILIES[f].n_features for f in resolve_families(families))
+
+
+def family_slices(families=DEFAULT_FAMILIES) -> dict:
+    """``{family: slice}`` giving each family's columns in the row."""
+    slices, offset = {}, 0
+    for f in resolve_families(families):
+        n = FAMILIES[f].n_features
+        slices[f] = slice(offset, offset + n)
+        offset += n
+    return slices
+
+
+def feature_names(families=DEFAULT_FAMILIES) -> tuple:
+    """Feature-row column names, in row order, for a family request."""
+    return tuple(
+        name for f in resolve_families(families) for name in FAMILIES[f].features
+    )
+
+
+def needs_intensity(families=DEFAULT_FAMILIES) -> bool:
+    """Does any requested family consume the intensity volume?"""
+    return any(FAMILIES[f].needs_intensity for f in resolve_families(families))
+
+
+@dataclasses.dataclass(frozen=True)
 class CaseMeta:
     """Per-case planning metadata (no device data).
 
@@ -158,13 +276,16 @@ class CaseMeta:
     ``roi_shape`` the cropped-ROI shape before bucket padding (pad-waste
     accounting); ``vertex_cap`` the pass-1 compaction cap;
     ``n_vertices`` the dedup vertex count (measured, or a
-    :func:`vertex_hint` for metadata-only plans).
+    :func:`vertex_hint` for metadata-only plans); ``intensity`` whether
+    the case stages an intensity volume alongside the mask (doubles the
+    voxel footprint in :func:`meta_bytes`).
     """
 
     shape: tuple | None
     roi_shape: tuple | None
     vertex_cap: int
     n_vertices: int
+    intensity: bool = False
 
     @property
     def empty(self) -> bool:
@@ -180,7 +301,10 @@ class ExtractionPlan:
     vertex cap), ``static_targets`` maps each cap group to its pass-2b
     bucket under the static schedule (``None`` target = feed originals;
     empty dict under the counted schedule, where targets come from the
-    fetched survivor counts at run time).
+    fetched survivor counts at run time).  ``families`` is the resolved
+    (canonical-order) feature-family tuple the window extracts; the
+    intensity families launch one batched kernel per shape group,
+    sharing the pass-2a shape buckets.
     """
 
     schedule: str
@@ -188,6 +312,7 @@ class ExtractionPlan:
     shape_groups: dict
     cap_groups: dict
     static_targets: dict
+    families: tuple = DEFAULT_FAMILIES
 
     @property
     def n_cases(self) -> int:
@@ -220,6 +345,7 @@ class ExtractionPlan:
             cap_slots += m.vertex_cap
         return {
             "schedule": self.schedule,
+            "families": list(self.families),
             "cases": self.n_cases,
             "empty_cases": sum(1 for m in self.metas if m.empty),
             "shape_buckets": len(self.shape_groups),
@@ -239,7 +365,10 @@ def meta_bytes(meta: CaseMeta) -> int:
     """
     if meta.empty:
         return 0
-    return 4 * math.prod(meta.shape) + 16 * meta.vertex_cap
+    vox = 4 * math.prod(meta.shape)
+    if meta.intensity:
+        vox *= 2  # staged f32 intensity volume alongside the mask
+    return vox + 16 * meta.vertex_cap
 
 
 @dataclasses.dataclass
@@ -280,7 +409,8 @@ class WindowCensus:
 SCHEDULES = ("counted", "static")
 
 
-def build_plan(metas: Sequence[CaseMeta], schedule: str = "counted") -> ExtractionPlan:
+def build_plan(metas: Sequence[CaseMeta], schedule: str = "counted",
+               families=DEFAULT_FAMILIES) -> ExtractionPlan:
     """Build the static plan for one window from case metadata alone."""
     if schedule not in SCHEDULES:
         raise ValueError(f"schedule must be one of {SCHEDULES}, got {schedule!r}")
@@ -295,6 +425,7 @@ def build_plan(metas: Sequence[CaseMeta], schedule: str = "counted") -> Extracti
             {cap: static_bucket(cap) for cap in cap_groups}
             if schedule == "static" else {}
         ),
+        families=resolve_families(families),
     )
 
 

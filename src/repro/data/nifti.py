@@ -2,8 +2,12 @@
 
 Supports the subset PyRadiomics workflows need: single-file ``.nii`` /
 ``.nii.gz``, scalar volumes, little-endian, dtypes {uint8, int16, int32,
-float32, float64}, pixdim spacing.  Enough to round-trip the synthetic
-KITS19-like suite and to ingest real segmentation masks.
+float32, float64}, pixdim spacing, ``scl_slope``/``scl_inter`` intensity
+rescaling, and >3D files whose trailing dims are all size 1 (a common
+export quirk: 4D with one timepoint).  Enough to round-trip the
+synthetic KITS19-like suite and to ingest real CT volumes and
+segmentation masks.  Big-endian files are detected and rejected with a
+clear error rather than misread.
 """
 from __future__ import annotations
 
@@ -18,7 +22,15 @@ _CODES = {np.dtype(v): k for k, v in _DTYPES.items()}
 
 
 def read_nifti(path):
-    """Returns (data (x,y,z) ndarray, spacing (3,) float32)."""
+    """Returns (data (x,y,z) ndarray, spacing (3,) float32).
+
+    Applies the header's ``scl_slope``/``scl_inter`` intensity rescale
+    (``slope * stored + inter``, as float32) whenever it is a real
+    rescale -- slope outside {0, 1} or a nonzero intercept; a slope of 0
+    means "unset" per the standard and is treated as 1.  Files with more
+    than 3 dims are accepted when every trailing dim is 1 (squeezed
+    away); genuinely >3D data still raises.
+    """
     path = Path(path)
     raw = path.read_bytes()
     if path.suffix == ".gz" or raw[:2] == b"\x1f\x8b":
@@ -27,17 +39,31 @@ def read_nifti(path):
         raise ValueError("not a NIfTI-1 file (too short)")
     sizeof_hdr = struct.unpack_from("<i", raw, 0)[0]
     if sizeof_hdr != 348:
+        # a byte-swapped sizeof_hdr is the standard's endianness probe:
+        # tell the user what the file IS, not just that the header looks bad
+        if struct.unpack_from(">i", raw, 0)[0] == 348:
+            raise ValueError(
+                "big-endian NIfTI byte order unsupported (this reader is "
+                "little-endian only); convert the file first"
+            )
         raise ValueError(f"unsupported NIfTI header size {sizeof_hdr}")
     dim = struct.unpack_from("<8h", raw, 40)
     ndim = dim[0]
-    if not 1 <= ndim <= 3:
-        raise ValueError(f"only 1-3D volumes supported, got dim={dim}")
+    if not 1 <= ndim <= 7:
+        raise ValueError(f"bad NIfTI dim[0]={ndim}, got dim={dim}")
     shape = tuple(int(d) for d in dim[1 : 1 + ndim])
+    # tolerate degenerate >3D exports (e.g. a 4D file with one timepoint):
+    # squeeze trailing size-1 dims, reject anything still >3D after that
+    while len(shape) > 3 and shape[-1] == 1:
+        shape = shape[:-1]
+    if len(shape) > 3:
+        raise ValueError(f"only 1-3D volumes supported, got dim={dim}")
     datatype = struct.unpack_from("<h", raw, 70)[0]
     if datatype not in _DTYPES:
         raise ValueError(f"unsupported datatype code {datatype}")
     pixdim = struct.unpack_from("<8f", raw, 76)
     vox_offset = int(struct.unpack_from("<f", raw, 108)[0])
+    scl_slope, scl_inter = struct.unpack_from("<2f", raw, 112)
     magic = raw[344:348]
     if magic not in (b"n+1\x00", b"ni1\x00"):
         raise ValueError(f"bad NIfTI magic {magic!r}")
@@ -46,12 +72,23 @@ def read_nifti(path):
     data = np.frombuffer(raw, dt, count=count, offset=vox_offset or 352)
     # NIfTI stores Fortran order (x fastest)
     data = data.reshape(shape, order="F")
-    spacing = np.asarray(pixdim[1 : 1 + max(3, ndim)][:3], np.float32)
+    data = np.ascontiguousarray(data)
+    if (
+        (scl_slope not in (0.0, 1.0) or scl_inter != 0.0)
+        and np.isfinite(scl_slope)
+        and np.isfinite(scl_inter)
+    ):
+        # slope 0 with a real intercept means "slope unset": apply as 1
+        slope = scl_slope if scl_slope != 0.0 else 1.0
+        data = (np.float32(slope) * data.astype(np.float32)
+                + np.float32(scl_inter))
+    spacing = np.asarray(pixdim[1:4], np.float32)
     spacing[spacing == 0] = 1.0
-    return np.ascontiguousarray(data), spacing
+    return data, spacing
 
 
-def write_nifti(path, data: np.ndarray, spacing=(1.0, 1.0, 1.0)):
+def write_nifti(path, data: np.ndarray, spacing=(1.0, 1.0, 1.0),
+                scl_slope: float = 0.0, scl_inter: float = 0.0):
     path = Path(path)
     data = np.asarray(data)
     if data.dtype not in _CODES:
@@ -65,6 +102,7 @@ def write_nifti(path, data: np.ndarray, spacing=(1.0, 1.0, 1.0)):
     pix = [0.0] + list(np.asarray(spacing, np.float32)) + [0.0] * (7 - 3)
     struct.pack_into("<8f", hdr, 76, *pix)
     struct.pack_into("<f", hdr, 108, 352.0)
+    struct.pack_into("<2f", hdr, 112, scl_slope, scl_inter)
     hdr[344:348] = b"n+1\x00"
     payload = bytes(hdr) + np.asfortranarray(data).tobytes(order="F")
     if str(path).endswith(".gz"):

@@ -42,12 +42,19 @@ def table2_cases():
     return list(TABLE2_CASES)
 
 
-def make_case(shape, seed=0, spacing=(1.0, 1.0, 1.0), n_blobs=None):
+def make_case(shape, seed=0, spacing=(1.0, 1.0, 1.0), n_blobs=None,
+              roi_contrast=60.0):
     """Deterministic synthetic (image, mask, spacing) for one case.
 
     The ROI is a union of overlapping random ellipsoids with a low-frequency
     boundary perturbation, producing organic surfaces whose vertex counts
     scale with the volume like the kidney/tumour ROIs in KITS19.
+
+    The image is a CT-like float32 intensity volume (soft-tissue
+    N(40, 15) background, ``roi_contrast`` HU added inside the ROI) --
+    the input the firstorder/glcm feature families consume; shape-only
+    extraction ignores it.  ``roi_contrast=0.0`` makes the ROI
+    statistically identical to the background (a texture-null case).
     """
     rng = np.random.default_rng(seed)
     nx, ny, nz = shape
@@ -75,7 +82,7 @@ def make_case(shape, seed=0, spacing=(1.0, 1.0, 1.0), n_blobs=None):
 
     # CT-like image: soft-tissue background + ROI contrast + noise
     image = rng.normal(40.0, 15.0, size=shape).astype(np.float32)
-    image[mask] += 60.0
+    image[mask] += np.float32(roi_contrast)
     return image, mask, np.asarray(spacing, np.float32)
 
 

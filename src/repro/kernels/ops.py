@@ -189,6 +189,93 @@ def prune_candidates_batch(verts, masks, k_dirs: int = 16):
     ]
 
 
+def firstorder_packed_batch(images, masks, *, backend=None, n_bins=32,
+                            block=None):
+    """Batched packed first-order stats over bucket-padded stacks.
+
+    ``images``/``masks``: (B, nx, ny, nz) device stacks ->
+    (B, packed_width) stats rows ([count, sum, sum_sq, hist, lo, hi,
+    bin_width]; see ``repro.kernels.firstorder``).  Designed to be
+    TRACED (it runs under the executor's sharded jit), so ``block`` must
+    already be concrete for kernel backends -- resolve it outside the
+    trace via ``dispatcher.firstorder_config``; the 'ref' backend has no
+    configuration axis.  Batched rows are bit-identical to single-case
+    extraction on every backend (canonical-chunk contract); the feature
+    row derives host-side via ``firstorder.features_from_packed_np``.
+    """
+    from repro.kernels import firstorder as _fo
+
+    b = dispatcher.resolve_backend(backend)
+    if b == "ref":
+        return _fo.firstorder_packed_batch_ref(images, masks, n_bins=n_bins)
+    if block is None or block == "auto":
+        raise ValueError(
+            "firstorder_packed_batch is traced: resolve block outside the "
+            "trace via dispatcher.firstorder_config"
+        )
+    return _fo.firstorder_packed_batch_pallas(
+        images, masks, n_bins=n_bins, block=int(block),
+        **dispatcher.kernel_kwargs(b),
+    )
+
+
+def firstorder_features_batch(images, masks, *, backend=None, n_bins=32,
+                              block=None):
+    """Batched first-order intensity rows: (B, 9) (host-finalised).
+
+    Convenience wrapper: :func:`firstorder_packed_batch` + the shared
+    host derivation.  NOT traceable -- traced callers (the executor)
+    consume the packed entry and finalise after the fetch.
+    """
+    from repro.kernels import firstorder as _fo
+
+    return _fo.features_from_packed_np(
+        firstorder_packed_batch(images, masks, backend=backend,
+                                n_bins=n_bins, block=block),
+        n_bins,
+    )
+
+
+def glcm_matrix_batch(images, masks, *, backend=None, n_bins=32, block=None):
+    """Batched symmetric GLCM count matrices: (B, n_bins, n_bins).
+
+    Counts are integer-valued f32 and exactly equal across backends and
+    block sizes (0/1 contributions; see ``repro.kernels.glcm``).  Traced
+    callers must resolve ``block`` via ``dispatcher.glcm_config``.
+    """
+    from repro.kernels import glcm as _glcm
+
+    b = dispatcher.resolve_backend(backend)
+    if b == "ref":
+        return _glcm.glcm_matrix_batch_ref(images, masks, n_bins=n_bins)
+    if block is None or block == "auto":
+        raise ValueError(
+            "glcm_matrix_batch is traced: resolve block outside the trace "
+            "via dispatcher.glcm_config"
+        )
+    return _glcm.glcm_matrix_batch_pallas(
+        images, masks, n_bins=n_bins, block=int(block),
+        **dispatcher.kernel_kwargs(b),
+    )
+
+
+def glcm_features_batch(images, masks, *, backend=None, n_bins=32,
+                        block=None):
+    """Batched Haralick GLCM rows: (B, 4) [contrast, corr, idm, energy].
+
+    Convenience wrapper: :func:`glcm_matrix_batch` + the shared host
+    derivation.  NOT traceable -- traced callers (the executor) consume
+    the matrix entry and finalise after the fetch.
+    """
+    from repro.kernels import glcm as _glcm
+
+    return _glcm.glcm_features_from_matrix_np(
+        glcm_matrix_batch(images, masks, backend=backend, n_bins=n_bins,
+                          block=block),
+        n_bins,
+    )
+
+
 def vertex_fields(vol, iso=0.5, spacing=(1.0, 1.0, 1.0), origin=(0.0, 0.0, 0.0)):
     """Dense dedup vertex fields (elementwise; same path on all backends)."""
     return _ref.vertex_fields(vol, iso, spacing, origin)

@@ -259,3 +259,38 @@ def max_diameters_sq(verts, mask, row_block=128):
 def max_diameters(verts, mask, row_block=128):
     """(4,) float32 diameters: [max 3D, xy(Slice), xz(Row), yz(Column)]."""
     return jnp.sqrt(max_diameters_sq(verts, mask, row_block=row_block))
+
+
+# ---------------------------------------------------------------------------
+# intensity-family helpers (first-order / GLCM): shared quantization contract
+# ---------------------------------------------------------------------------
+
+def intensity_range(image, mask):
+    """Masked intensity ``(lo, hi)`` -- order-invariant (pure min/max).
+
+    Min/max are exact under any reduction order, so every backend computes
+    bit-identical ranges (and therefore bit-identical bin edges) without a
+    canonical-order contract.  An empty mask yields ``(0, 0)``.
+    """
+    img = jnp.asarray(image, jnp.float32)
+    m = jnp.asarray(mask) > 0
+    any_ = jnp.any(m)
+    lo = jnp.where(any_, jnp.min(jnp.where(m, img, jnp.inf)), 0.0)
+    hi = jnp.where(any_, jnp.max(jnp.where(m, img, -jnp.inf)), 0.0)
+    return lo, hi
+
+
+def quantize_intensity(image, mask, lo, hi, n_bins: int):
+    """Fixed-bin-count discretization: f32 bin ids in ``[0, n_bins)``.
+
+    Returns ``(q, width)`` where ``q`` is float32 (one-hot comparisons in
+    the kernels stay in the native MXU dtype) and masked-out voxels are
+    forced to bin 0.  A degenerate range (constant intensity, empty mask)
+    has ``width == 0`` and every voxel in bin 0.  Purely elementwise, so
+    ``lo``/``hi`` may be scalars or broadcastable per-case columns.
+    """
+    img = jnp.asarray(image, jnp.float32)
+    width = (hi - lo) / n_bins
+    safe = jnp.where(width > 0, width, 1.0)
+    q = jnp.clip(jnp.floor((img - lo) / safe), 0.0, float(n_bins - 1))
+    return jnp.where(jnp.asarray(mask) > 0, q, 0.0), width

@@ -16,7 +16,11 @@ Cache schema (versioned): one JSON object ``{"schema": 3, "entries": {...}}``
 with entries keyed ``"diameter/<backend>/M<bucket>/B<depth>"``,
 ``"mc/<backend>/S<nx>x<ny>x<nz>/B<depth>"``,
 ``"compact/<backend>/M<bucket>/B<depth>"`` (the segmented-compaction
-scatter block), and ``"sync/<backend>"`` (the measured device->host
+scatter block), ``"firstorder/<backend>/S<nx>x<ny>x<nz>/B<depth>"`` /
+``"glcm/<backend>/S<nx>x<ny>x<nz>/B<depth>"`` (the intensity-family
+reduction/pair-scatter blocks, one namespace per registered feature
+family -- see ``repro.core.plan.FamilySpec``), and ``"sync/<backend>"``
+(the measured device->host
 fetch latency -- the quantity the counted-vs-static schedule decision
 of ``runtime/costmodel`` turns on; probed once per backend, not per
 bucket, since a (B, 2) count fetch is latency- not bandwidth-bound).  ``B<depth>`` is the power-of-two *batch-depth bucket*
@@ -65,6 +69,12 @@ DEFAULT_MC_CHUNKS = (256, 512, 1024)
 
 DEFAULT_COMPACT_BLOCKS = (128, 256, 512)
 
+# first-order blocks MUST be multiples of the canonical accumulation chunk
+# (kernels/firstorder.CANON_CHUNK) -- the sweep enforces this, so a tuned
+# block can never change feature bits
+DEFAULT_FIRSTORDER_BLOCKS = (1024, 2048, 4096)
+DEFAULT_GLCM_BLOCKS = (512, 1024, 2048, 4096)
+
 
 @dataclasses.dataclass(frozen=True)
 class DiameterConfig:
@@ -83,9 +93,18 @@ class CompactConfig:
     block: int
 
 
+@dataclasses.dataclass(frozen=True)
+class FamilyConfig:
+    """One intensity-family kernel configuration (block is the only axis)."""
+
+    block: int
+
+
 DEFAULT_CONFIG = DiameterConfig("seqacc", 256)
 DEFAULT_MC_CONFIG = MCConfig((8, 8, 8), 512)
 DEFAULT_COMPACT_CONFIG = CompactConfig(256)
+DEFAULT_FIRSTORDER_CONFIG = FamilyConfig(2048)
+DEFAULT_GLCM_CONFIG = FamilyConfig(2048)
 
 
 def cache_path() -> str:
@@ -199,6 +218,17 @@ def mc_key(shape, backend: str, batch: int = 1) -> str:
 
 def compact_key(bucket: int, backend: str, batch: int = 1) -> str:
     return f"compact/{backend}/M{int(bucket)}/B{batch_bucket(batch)}"
+
+
+def family_key(family: str, shape, backend: str, batch: int = 1) -> str:
+    """Key for an intensity-family block entry: ``<ns>/<backend>/S../B..``.
+
+    ``family`` is the autotune namespace a :class:`repro.core.plan.FamilySpec`
+    registered (``firstorder`` / ``glcm``); ``shape`` the padded-volume
+    bucket the launch carries.
+    """
+    nx, ny, nz = (int(s) for s in shape)
+    return f"{family}/{backend}/S{nx}x{ny}x{nz}/B{batch_bucket(batch)}"
 
 
 def mc_shape_bucket(shape, step: int = 32) -> tuple[int, int, int]:
@@ -649,6 +679,171 @@ def get_compact_config(
         return DEFAULT_COMPACT_CONFIG
     best, table = sweep_compact(
         bucket, backend, blocks=blocks, batch=batch_bucket(batch),
+        repeat=repeat,
+    )
+    cache.put(
+        key,
+        {
+            "block": best.block,
+            "us": table[str(best.block)],
+            "table": table,
+            "swept_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        },
+    )
+    return best
+
+
+# ---------------------------------------------------------------------------
+# intensity-family (firstorder / glcm) block sweeps
+# ---------------------------------------------------------------------------
+
+
+def _family_blocks(family: str):
+    if family == "firstorder":
+        return DEFAULT_FIRSTORDER_BLOCKS
+    if family == "glcm":
+        return DEFAULT_GLCM_BLOCKS
+    raise ValueError(f"unknown autotune family namespace {family!r}")
+
+
+def _family_default(family: str) -> FamilyConfig:
+    return (DEFAULT_FIRSTORDER_CONFIG if family == "firstorder"
+            else DEFAULT_GLCM_CONFIG)
+
+
+def _probe_intensity_case(shape, seed: int = 0):
+    """Masked intensity probe: the MC ellipsoid mask + a CT-like image."""
+    mask = _mc_probe_volume(shape)
+    rng = np.random.default_rng(seed)
+    image = np.asarray(rng.normal(40.0, 15.0, size=shape), np.float32)
+    return image, mask
+
+
+def measure_family_config(
+    family: str,
+    shape,
+    backend: str,
+    block: int,
+    *,
+    batch: int = 4,
+    repeat: int = 2,
+    warmup: int = 1,
+) -> float:
+    """Best-of-``repeat`` wall-clock seconds for one family block.
+
+    Measures the batched launch the executor actually issues: the whole
+    (batch, *shape) stack through the family's Pallas kernel.
+    """
+    from repro.core import dispatcher
+    from repro.kernels import firstorder as fok
+    from repro.kernels import glcm as gk
+
+    image, mask = _probe_intensity_case(tuple(int(s) for s in shape))
+    batch = max(1, int(batch))
+    images = np.broadcast_to(image, (batch,) + image.shape)
+    masks = np.broadcast_to(mask, (batch,) + mask.shape)
+    kw = dispatcher.kernel_kwargs(backend)
+
+    # measure the traced device payload (what the executor launches);
+    # feature finalisation is host-side numpy and not part of the launch
+    if family == "firstorder":
+        def call():
+            return fok.firstorder_packed_batch_pallas(
+                images, masks, block=block, **kw
+            )
+    elif family == "glcm":
+        def call():
+            return gk.glcm_matrix_batch_pallas(
+                images, masks, block=block, **kw
+            )
+    else:
+        raise ValueError(f"unknown autotune family namespace {family!r}")
+
+    for _ in range(warmup):
+        jax.block_until_ready(call())
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(call())
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def sweep_family(
+    family: str,
+    shape,
+    backend: str,
+    *,
+    blocks=None,
+    batch: int = 4,
+    repeat: int = 2,
+):
+    """Measure every family block candidate; returns (best, table).
+
+    ``table`` maps ``str(block)`` to measured microseconds.  For the
+    first-order family, candidates that are not multiples of the
+    canonical accumulation chunk are dropped (they would violate the
+    bitwise left-fold contract, not just waste time).
+    """
+    from repro.kernels import firstorder as fok
+
+    blocks = tuple(blocks) if blocks is not None else _family_blocks(family)
+    if family == "firstorder":
+        usable = [b for b in blocks if b % fok.CANON_CHUNK == 0]
+        if not usable:
+            usable = [fok.DEFAULT_BLOCK]
+    else:
+        usable = list(blocks)
+    table: dict[str, float] = {}
+    best, best_t = None, float("inf")
+    for block in usable:
+        t = measure_family_config(
+            family, shape, backend, block, batch=batch, repeat=repeat
+        )
+        table[str(block)] = t * 1e6
+        if t < best_t:
+            best, best_t = FamilyConfig(block), t
+    return best, table
+
+
+def get_family_config(
+    family: str,
+    shape,
+    backend: str,
+    *,
+    batch: int = 1,
+    cache: AutotuneCache | None = None,
+    blocks=None,
+    repeat: int = 2,
+) -> FamilyConfig:
+    """Cached-or-swept best family block per (volume bucket, depth).
+
+    Same contract as :func:`get_diameter_config`: cache hit -> no kernel
+    runs; miss sweeps when allowed and persists winner + table; disallowed
+    sweeps return the default uncached.  ``shape`` should already be an
+    autotune bucket (see :func:`mc_shape_bucket`).
+    """
+    from repro.kernels import firstorder as fok
+
+    if backend == "ref":
+        return _family_default(family)
+    shape = tuple(int(s) for s in shape)
+    cache = cache or AutotuneCache()
+    key = family_key(family, shape, backend, batch)
+    hit = cache.get(key)
+    if hit is not None:
+        try:
+            cfg = FamilyConfig(int(hit["block"]))
+        except (KeyError, TypeError, ValueError):
+            cfg = None
+        if cfg is not None and cfg.block > 0 and not (
+            family == "firstorder" and cfg.block % fok.CANON_CHUNK
+        ):
+            return cfg
+    if not _sweep_allowed(backend):
+        return _family_default(family)
+    best, table = sweep_family(
+        family, shape, backend, blocks=blocks, batch=batch_bucket(batch),
         repeat=repeat,
     )
     cache.put(

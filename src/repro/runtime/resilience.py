@@ -74,16 +74,12 @@ import numpy as np
 
 from repro.runtime.fault_tolerance import PreemptionHandler, StragglerDetector
 
-# canonical feature-row column names (PlanExecutor.N_FEATURES order)
-FEATURE_NAMES = (
-    "MeshVolume",
-    "SurfaceArea",
-    "Maximum3DDiameter",
-    "Maximum2DDiameterSlice",
-    "Maximum2DDiameterRow",
-    "Maximum2DDiameterColumn",
-    "n_vertices",
-)
+# canonical feature-row column names, single-sourced from the family
+# registry (the default shape-only request; pass a multi-family
+# ``plan.feature_names(families)`` as ``feature_names=`` for wider rows)
+from repro.core.plan import feature_names as _plan_feature_names
+
+FEATURE_NAMES = _plan_feature_names()
 
 
 class InjectedFault(RuntimeError):

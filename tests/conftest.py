@@ -12,6 +12,7 @@ if importlib.util.find_spec("hypothesis") is None:
         "test_kernels_mc.py",
         "test_mc_tables.py",
         "test_prune_properties.py",
+        "test_families_properties.py",
     ]
 
 

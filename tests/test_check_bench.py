@@ -1,0 +1,136 @@
+"""Bench-regression gate: baseline resolution + failure-mode contracts.
+
+The bugs PR 7 fixed, locked down with real throwaway git repos:
+
+* ``git show REF:path`` resolves against the repo ROOT -- the gate must
+  translate its record path to repo-relative (and work from any cwd /
+  with absolute paths) instead of silently skipping;
+* only a genuinely MISSING baseline (first commit, never-committed file,
+  no repo) skips the gate; any other lookup failure -- a corrupt
+  committed record, an unreadable object -- must FAIL it, because a gate
+  that skips on unexpected errors has stopped gating.
+"""
+import importlib.util
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+pytestmark = pytest.mark.tier1
+
+_SCRIPT = Path(__file__).resolve().parent.parent / "scripts" / "check_bench.py"
+
+
+@pytest.fixture(scope="module")
+def cb():
+    spec = importlib.util.spec_from_file_location("check_bench", _SCRIPT)
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules["check_bench"] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _git(repo, *args):
+    subprocess.run(["git", "-C", str(repo), *args], check=True,
+                   capture_output=True)
+
+
+def _record(rows):
+    return {"rows": [{"name": n, "cases_per_second": v} for n, v in rows]}
+
+
+@pytest.fixture
+def repo(tmp_path):
+    repo = tmp_path / "repo"
+    repo.mkdir()
+    _git(repo, "init", "-q")
+    _git(repo, "config", "user.email", "t@e.st")
+    _git(repo, "config", "user.name", "t")
+    return repo
+
+
+def _commit_baseline(repo, payload, name="BENCH_pipeline.json"):
+    (repo / name).write_text(json.dumps(payload))
+    _git(repo, "add", name)
+    _git(repo, "commit", "-q", "-m", "baseline")
+
+
+def test_gate_passes_and_fails_on_regression(cb, repo, monkeypatch):
+    _commit_baseline(repo, _record([("fast", 10.0), ("slow", 10.0)]))
+    fresh = repo / "BENCH_pipeline.json"
+    fresh.write_text(json.dumps(_record([("fast", 9.0), ("slow", 10.0)])))
+    monkeypatch.chdir(repo)
+    assert cb.main(["--pipeline", str(fresh)]) == 0
+    fresh.write_text(json.dumps(_record([("fast", 5.0), ("slow", 10.0)])))
+    assert cb.main(["--pipeline", str(fresh)]) == 1
+
+
+def test_absolute_path_from_foreign_cwd(cb, repo, tmp_path, monkeypatch):
+    """The repo-relative fix: gate must find the baseline from anywhere."""
+    _commit_baseline(repo, _record([("row", 10.0)]))
+    fresh = repo / "BENCH_pipeline.json"
+    fresh.write_text(json.dumps(_record([("row", 2.0)])))  # 5x regression
+    elsewhere = tmp_path / "elsewhere"
+    elsewhere.mkdir()
+    monkeypatch.chdir(elsewhere)
+    # before the fix this skipped (git show failed) and returned 0
+    assert cb.main(["--pipeline", str(fresh)]) == 1
+
+
+def test_nested_cwd_resolves_repo_relative(cb, repo, monkeypatch):
+    _commit_baseline(repo, _record([("row", 10.0)]))
+    sub = repo / "sub"
+    sub.mkdir()
+    fresh = repo / "BENCH_pipeline.json"
+    fresh.write_text(json.dumps(_record([("row", 2.0)])))
+    monkeypatch.chdir(sub)
+    assert cb.main(["--pipeline", "../BENCH_pipeline.json"]) == 1
+
+
+def test_missing_baseline_skips(cb, repo, monkeypatch):
+    # committed repo, but this record was never committed
+    _commit_baseline(repo, _record([("row", 1.0)]), name="OTHER.json")
+    fresh = repo / "BENCH_pipeline.json"
+    fresh.write_text(json.dumps(_record([("row", 0.1)])))
+    monkeypatch.chdir(repo)
+    assert cb.main(["--pipeline", str(fresh)]) == 0
+
+
+def test_unborn_ref_skips(cb, repo, monkeypatch):
+    # fresh init, zero commits: HEAD is an unknown revision -> skip
+    fresh = repo / "BENCH_pipeline.json"
+    fresh.write_text(json.dumps(_record([("row", 0.1)])))
+    monkeypatch.chdir(repo)
+    assert cb.main(["--pipeline", str(fresh)]) == 0
+
+
+def test_outside_any_repo_skips(cb, tmp_path, monkeypatch):
+    lone = tmp_path / "norepo"
+    lone.mkdir()
+    fresh = lone / "BENCH_pipeline.json"
+    fresh.write_text(json.dumps(_record([("row", 0.1)])))
+    monkeypatch.chdir(lone)
+    assert cb.main(["--pipeline", str(fresh)]) == 0
+
+
+def test_corrupt_committed_baseline_fails_loudly(cb, repo, monkeypatch):
+    """A non-missing lookup problem must FAIL, not silently skip."""
+    (repo / "BENCH_pipeline.json").write_text("{not json")
+    _git(repo, "add", "BENCH_pipeline.json")
+    _git(repo, "commit", "-q", "-m", "corrupt")
+    (repo / "BENCH_pipeline.json").write_text(
+        json.dumps(_record([("row", 1.0)]))
+    )
+    monkeypatch.chdir(repo)
+    assert cb.main(["--pipeline", str(repo / "BENCH_pipeline.json")]) == 1
+
+
+def test_load_baseline_triple_contract(cb, repo, monkeypatch):
+    _commit_baseline(repo, _record([("row", 1.0)]))
+    monkeypatch.chdir(repo)
+    data, skip, err = cb.load_baseline("BENCH_pipeline.json", "HEAD")
+    assert data is not None and skip is None and err is None
+    data, skip, err = cb.load_baseline("BENCH_pipeline.json", "no-such-ref")
+    assert data is None and skip is not None and err is None

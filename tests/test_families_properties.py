@@ -1,0 +1,120 @@
+"""Hypothesis property tests for the first-order / GLCM family contracts.
+
+Gated on hypothesis being importable (see tests/conftest.py); seeded
+plain-pytest mirrors live in tests/test_features_families.py so the
+invariants are exercised even in the minimal container.
+
+Invariants (the parity argument of kernels/firstorder and kernels/glcm):
+
+  1. first-order packed stats are BITWISE identical between the
+     reference canonical fold and the Pallas kernel, for every
+     CANON_CHUNK-multiple block -- on arbitrary volumes, masks, and
+     intensity ranges (including constant and near-constant images);
+  2. batched packed stats equal single-case stats bitwise (the canonical
+     fold never sees the batch);
+  3. GLCM count matrices are symmetric, integer-valued, equal to an
+     independent ``np.add.at`` scatter oracle, and their total counts
+     equal the number of valid in-mask neighbour pairs;
+  4. quantized bin ids always land in ``[0, n_bins)`` and masked-out
+     voxels always quantize to bin 0 (never perturbing the histogram).
+"""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import firstorder as fok
+from repro.kernels import glcm as gk
+from repro.kernels import ref as rk
+
+_SETTINGS = dict(
+    max_examples=20,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+
+_shapes = st.tuples(
+    st.integers(3, 12), st.integers(3, 12), st.integers(3, 12)
+)
+
+
+def _volume(seed, shape, mask_p, lo, hi, constant):
+    rng = np.random.default_rng(seed)
+    if constant:
+        img = np.full(shape, np.float32(lo), np.float32)
+    else:
+        img = rng.uniform(lo, hi, size=shape).astype(np.float32)
+    mask = (rng.random(shape) < mask_p).astype(np.float32)
+    return img, mask
+
+
+@st.composite
+def cases(draw):
+    shape = draw(_shapes)
+    seed = draw(st.integers(0, 2**16))
+    mask_p = draw(st.sampled_from([0.0, 0.1, 0.5, 0.95]))
+    lo = draw(st.floats(-500, 500, allow_nan=False, width=32))
+    span = draw(st.sampled_from([0.0, 1e-3, 1.0, 300.0]))
+    constant = draw(st.booleans())
+    return _volume(seed, shape, mask_p, lo, lo + span, constant)
+
+
+@given(case=cases(), block_mult=st.sampled_from([1, 2, 4]))
+@settings(**_SETTINGS)
+def test_fo_ref_equals_pallas_any_block(case, block_mult):
+    img, mask = case
+    ref = np.asarray(fok.firstorder_packed_batch_ref(img[None], mask[None]))
+    pal = np.asarray(fok.firstorder_packed_batch_pallas(
+        img[None], mask[None], block=block_mult * fok.CANON_CHUNK,
+        interpret=True,
+    ))
+    np.testing.assert_array_equal(ref, pal)
+
+
+@given(seeds=st.lists(st.integers(0, 2**16), min_size=2, max_size=4,
+                      unique=True))
+@settings(**_SETTINGS)
+def test_fo_batched_equals_single(seeds):
+    vols = [_volume(s, (7, 9, 8), 0.5, -100.0, 200.0, False) for s in seeds]
+    imgs = np.stack([v[0] for v in vols])
+    msks = np.stack([v[1] for v in vols])
+    batched = np.asarray(fok.firstorder_packed_batch_ref(imgs, msks))
+    for i, (img, mask) in enumerate(vols):
+        single = np.asarray(
+            fok.firstorder_packed_batch_ref(img[None], mask[None])
+        )[0]
+        np.testing.assert_array_equal(batched[i], single)
+
+
+@given(case=cases())
+@settings(**_SETTINGS)
+def test_glcm_matrix_invariants(case):
+    img, mask = case
+    g = np.asarray(gk.glcm_matrix_batch_pallas(img[None], mask[None],
+                                               block=512, interpret=True))[0]
+    np.testing.assert_array_equal(g, g.T)
+    np.testing.assert_array_equal(g, np.round(g))
+    assert (g >= 0).all()
+    # total == 2 * (number of valid in-mask neighbour pairs)
+    m = mask > 0
+    pairs = sum(
+        int(np.sum(m[tuple(slice(None, -o) if o else slice(None)
+                           for o in off)]
+                   & m[tuple(slice(o, None) for o in off)]))
+        for off in gk.OFFSETS
+    )
+    assert g.sum() == 2 * pairs
+    # and equals the independent scatter oracle
+    ref = np.asarray(gk.glcm_matrix_batch_ref(img[None], mask[None]))[0]
+    np.testing.assert_array_equal(g, ref)
+
+
+@given(case=cases(), n_bins=st.sampled_from([8, 32]))
+@settings(**_SETTINGS)
+def test_quantize_bounds(case, n_bins):
+    img, mask = case
+    lo, hi = rk.intensity_range(img, mask)
+    q, _ = rk.quantize_intensity(img, mask, lo, hi, n_bins)
+    q = np.asarray(q)
+    assert ((q >= 0) & (q <= n_bins - 1)).all()
+    assert (q[np.asarray(mask) == 0] == 0).all()

@@ -1,9 +1,20 @@
-"""NIfTI IO: round-trip + feature-extraction integration."""
+"""NIfTI IO: round-trip, header quirks, feature-extraction integration.
+
+The header-quirk cases are the real-world loader bugs PR 7 flushed out:
+``scl_slope``/``scl_inter`` rescaling silently ignored (wrong intensity
+features from rescaled CT exports), degenerate 4D single-timepoint files
+rejected, and big-endian files misread as garbage instead of erroring.
+"""
+import gzip
+import struct
+
 import numpy as np
 import pytest
 
 from repro.data.nifti import read_nifti, write_nifti
 from repro.data.synthetic import make_case
+
+pytestmark = pytest.mark.tier1
 
 
 @pytest.mark.parametrize("gz", [False, True])
@@ -17,6 +28,74 @@ def test_roundtrip(tmp_path, gz, dtype):
     got, spacing = read_nifti(p)
     np.testing.assert_array_equal(got, data)
     np.testing.assert_allclose(spacing, sp, rtol=1e-6)
+
+
+@pytest.mark.parametrize("slope,inter", [(2.0, 0.0), (1.0, -1024.0),
+                                         (0.5, 100.0), (0.0, -1024.0)])
+def test_scl_slope_inter_applied(tmp_path, slope, inter):
+    stored = np.arange(24, dtype=np.int16).reshape(4, 3, 2)
+    p = tmp_path / "ct.nii"
+    write_nifti(p, stored, scl_slope=slope, scl_inter=inter)
+    got, _ = read_nifti(p)
+    # slope 0 means "unset" per the standard: applied as 1
+    eff = slope if slope != 0.0 else 1.0
+    assert got.dtype == np.float32
+    np.testing.assert_allclose(got, eff * stored + inter, rtol=1e-6)
+
+
+@pytest.mark.parametrize("slope,inter", [(0.0, 0.0), (1.0, 0.0)])
+def test_scl_noop_header_keeps_stored_values(tmp_path, slope, inter):
+    stored = np.arange(24, dtype=np.int16).reshape(4, 3, 2)
+    p = tmp_path / "raw.nii"
+    write_nifti(p, stored, scl_slope=slope, scl_inter=inter)
+    got, _ = read_nifti(p)
+    assert got.dtype == np.int16  # untouched, not silently floated
+    np.testing.assert_array_equal(got, stored)
+
+
+def test_degenerate_4d_single_timepoint_squeezed(tmp_path):
+    vol = (np.random.default_rng(0).random((6, 5, 4)) * 40).astype(np.float32)
+    p = tmp_path / "t1.nii"
+    write_nifti(p, vol[..., None])  # 4D export, one timepoint
+    got, _ = read_nifti(p)
+    assert got.shape == (6, 5, 4)
+    np.testing.assert_array_equal(got, vol)
+    # genuinely 4D data still refuses
+    p2 = tmp_path / "dyn.nii"
+    write_nifti(p2, np.zeros((4, 4, 4, 3), np.float32))
+    with pytest.raises(ValueError, match="1-3D"):
+        read_nifti(p2)
+
+
+@pytest.mark.parametrize("gz", [False, True])
+def test_big_endian_clear_error(tmp_path, gz):
+    p = tmp_path / ("be.nii.gz" if gz else "be.nii")
+    write_nifti(tmp_path / "le.nii", np.zeros((3, 3, 3), np.uint8))
+    raw = bytearray((tmp_path / "le.nii").read_bytes())
+    # byte-swap sizeof_hdr: the standard's endianness marker
+    struct.pack_into(">i", raw, 0, 348)
+    p.write_bytes(gzip.compress(bytes(raw)) if gz else bytes(raw))
+    with pytest.raises(ValueError, match="byte order unsupported"):
+        read_nifti(p)
+
+
+def test_intensity_features_from_rescaled_nifti(tmp_path):
+    """scl-rescaled CT + firstorder family: the end-to-end loader fix."""
+    img, msk, sp = make_case((18, 16, 14), seed=3)
+    stored = np.round(img * 2.0).astype(np.int16)  # quantised export
+    write_nifti(tmp_path / "ct.nii.gz", stored, sp,
+                scl_slope=0.5, scl_inter=-10.0)
+    write_nifti(tmp_path / "m.nii.gz", msk.astype(np.uint8), sp)
+    image, _ = read_nifti(tmp_path / "ct.nii.gz")
+    mask, spacing = read_nifti(tmp_path / "m.nii.gz")
+
+    from repro.core.executor import PlanExecutor
+
+    ex = PlanExecutor(backend="ref", families="firstorder")
+    got = ex.extract_one(image, mask, spacing)
+    want = ex.extract_one(0.5 * stored.astype(np.float32) - 10.0,
+                          msk.astype(np.float32), sp)
+    np.testing.assert_array_equal(got, want)
 
 
 def test_feature_extraction_from_nifti(tmp_path):
