@@ -7,6 +7,7 @@ One benchmark per paper table/figure (+ the roofline report):
     fig2     -- size scaling + projected speedup    (paper Fig. 2)
     pipeline -- batched multi-case throughput       (paper §3 workflow)
     soak     -- faulted/preempted/resumed soak      (resilience gate)
+    serve    -- service mixed-traffic p50/p99       (serving-tier gate)
     roofline -- dry-run roofline table              (EXPERIMENTS §Roofline)
 
 Prints ``name,us_per_call,derived`` CSV.  Select suites with --only.
@@ -25,7 +26,7 @@ import json
 import sys
 import time
 
-SUITES = ("table2", "fig1", "fig2", "pipeline", "soak", "roofline")
+SUITES = ("table2", "fig1", "fig2", "pipeline", "soak", "serve", "roofline")
 
 
 def _write_record(path: str, bench: str, suite: str, rows: list, ok: bool):
@@ -92,6 +93,13 @@ def main(argv=None):
                 # (its soak_resilience row is cases/sec like the others)
                 from benchmarks import soak
                 rows = soak.run(records=pipeline_records)
+            elif suite == "serve":
+                # serving-tier mixed-traffic rows ride the same record:
+                # throughput is cases/sec, and the p50/p99 latency rows
+                # encode 1/latency as cases_per_second so the gate's
+                # higher-is-better rule catches latency regressions too
+                from benchmarks import serve_latency
+                rows = serve_latency.run(records=pipeline_records)
             else:
                 from benchmarks import roofline_report
                 rows = roofline_report.run()

@@ -64,6 +64,13 @@ stage families python -m pytest -q -m tier1 \
     tests/test_nifti.py \
     tests/test_check_bench.py
 
+# 6) serving gates: service==stream row parity (ref + interpret),
+#    cross-tenant window fusion, deadline expiry without co-tenant
+#    stalls, queue-byte backpressure -- plus a short mixed-traffic
+#    smoke through the CLI entry point
+stage serve python -m pytest -q -m tier1 tests/test_service.py
+stage serve_smoke python -m repro.launch.serve --backend ref --smoke
+
 if [[ "${SMOKE_SKIP_BENCH:-0}" != "1" ]]; then
   # 6) kernel-wiring smoke: Fig.1 variant sweep (interpret mode) + the
   #    BENCH_diameter.json perf-trajectory record
@@ -71,12 +78,14 @@ if [[ "${SMOKE_SKIP_BENCH:-0}" != "1" ]]; then
   test -s BENCH_diameter.json
 
   # 7) batched-throughput smoke: the pipeline mode ladder (single loop ->
-  #    streaming auto) plus the ~200-case faulted/preempted/resumed soak
-  #    (SOAK_CASES), recorded as the BENCH_pipeline.json trajectory, then
-  #    gated against the committed trajectory (>30% cases/s or us/call
-  #    regression on any named row fails)
+  #    streaming auto), the ~200-case faulted/preempted/resumed soak
+  #    (SOAK_CASES), and the serving-tier mixed-traffic p50/p99 rows, all
+  #    recorded as the BENCH_pipeline.json trajectory, then gated against
+  #    the committed trajectory (>30% cases/s or us/call regression on
+  #    any named row fails; the latency rows encode 1/latency as
+  #    cases_per_second so the same rule gates latency)
   stage bench_pipeline env SOAK_CASES="${SOAK_CASES:-200}" \
-      python -m benchmarks.run --only pipeline soak --json-pipeline BENCH_pipeline.json
+      python -m benchmarks.run --only pipeline soak serve --json-pipeline BENCH_pipeline.json
   test -s BENCH_pipeline.json
   stage bench_gate python scripts/check_bench.py \
       --pipeline BENCH_pipeline.json --diameter BENCH_diameter.json

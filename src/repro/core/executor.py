@@ -715,6 +715,25 @@ class PlanExecutor:
         return planlib.CaseMeta(p.shape, p.roi_shape, p.vertex_cap,
                                 p.n_vertices, intensity=p.image is not None)
 
+    # -- public prep surface (the submit/collect reuse contract) -------------
+    #
+    # External drivers that window cases themselves -- the resilient
+    # runner (runtime/resilience) and the serving tier (serve/service) --
+    # prep each case through here, census its metadata, and hand the
+    # prepped batch to submit_prepped/collect_window.  Everything they
+    # need is these two names plus the window API; the underscore
+    # internals stay private.
+
+    def prep_case(self, case) -> _Prepped:
+        """Pass-0 prep of one case, quarantining any load/validation
+        failure (see :meth:`_prep_case_safe`); ``case`` is an
+        ``(image, mask, spacing)`` tuple or a zero-arg loader callable."""
+        return self._prep_case_safe(case, fields=self.prune)
+
+    def case_meta(self, p: _Prepped) -> planlib.CaseMeta:
+        """Planning metadata of a prepped case (feeds ``WindowCensus``)."""
+        return self._meta(p)
+
     # -- pass 1 --------------------------------------------------------------
 
     def _prune_pass(self, plan, prepped):

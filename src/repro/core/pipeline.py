@@ -125,6 +125,34 @@ cluster run *survivable*, not just fast:
   window; rows already committed are skipped by the done-set).  Proved
   by ``tests/test_resilience.py`` (tier-1) and soaked at scale by
   ``benchmarks/soak.py``.
+
+Serving (``serve/service``, PR 8) -- the persistent multi-tenant front
+door over the same windows (``serve()`` below returns the service):
+
+* **API**: concurrent clients call ``submit(cases, tenant=...,
+  deadline_s=..., block=...)`` (single or batch; tuples or loader
+  callables) and get a ``ServeFuture``; ``future.result()`` returns the
+  request's rows in ITS OWN input order plus a per-case ``errors`` map.
+  One driver thread owns all device work and fuses queued cases across
+  tenants into shared windows with the same ``plan.WindowCensus`` +
+  ``CostModel.should_close`` the stream uses -- served rows are
+  bit-identical to ``extract_stream`` on the same cases (tier-1).
+* **deadline semantics**: ``deadline_s`` is relative to submit.  While a
+  case is still QUEUED its request may expire: it then completes with a
+  ``DeadlineExceeded`` error row and never occupies a window slot, and
+  co-tenant cases sharing its windows are untouched.  Once a case is
+  admitted to a window it is always delivered (``ServeResult.late``
+  marks overruns); ``CostModel.deadline_at_risk`` -- the first
+  latency-vs-throughput decision -- closes the open window early when
+  its modeled cost (sync + diameter tables, x2 safety) threatens the
+  oldest pending deadline, making late delivery rare.
+* **backpressure**: admission is bounded by estimated queued bytes
+  (``plan.meta_bytes`` over uncropped metadata, a conservative
+  over-estimate); a full queue blocks the submitter or raises
+  ``ServiceOverloaded`` (``block=False``), so bursts cannot OOM the
+  staging host.  Quarantine semantics are the executor's, reported per
+  request index.  ``benchmarks/serve_latency.py`` gates mixed-traffic
+  p50/p99 + throughput; ``python -m repro.launch.serve`` is the CLI.
 """
 from __future__ import annotations
 
@@ -234,3 +262,19 @@ class BatchedExtractor:
     def extract_one(self, image, mask, spacing):
         """Single-case parity oracle (identical stages, no batching)."""
         return self.executor.extract_one(image, mask, spacing)
+
+    def serve(self, *, max_queue_bytes: float | None = None,
+              idle_tick_s: float = 0.002):
+        """Start the persistent multi-tenant service over this extractor.
+
+        Returns a running ``serve.service.ExtractionService`` (also a
+        context manager): concurrent clients ``submit()`` cases and the
+        driver fuses them across tenants into shared windows, honouring
+        per-request deadlines and the queue-byte backpressure budget.
+        See the module docstring's Serving section for the semantics.
+        """
+        from repro.serve.service import ExtractionService
+
+        return ExtractionService(
+            self, max_queue_bytes=max_queue_bytes, idle_tick_s=idle_tick_s,
+        )

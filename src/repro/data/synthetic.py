@@ -97,15 +97,46 @@ def stream_cases(n, dims_pool=None, seed=0, spacing=(1.0, 1.0, 1.0),
     producer must be an iterator, not a list.  ``dims_pool`` defaults to
     the small-to-medium Table-2 dimensions; ``skip`` names cases to
     exclude (the cluster example's restart path).
+
+    Always yields exactly ``n`` SURVIVING cases: a skipped name advances
+    the index past it rather than shrinking the output, so a restart
+    that excludes already-done cases still processes the promised count.
+    Each case's content stays keyed to its original index (``case-i``
+    is identical whether or not earlier names were skipped).
     """
     if dims_pool is None:
         dims_pool = [d for _, d in TABLE2_CASES if min(d) >= 10][:8]
-    for i in range(n):
+    produced, i = 0, 0
+    while produced < n:
         name = f"case-{i:05d}"
         if name in skip:
+            i += 1
             continue
         img, msk, sp = make_case(dims_pool[i % len(dims_pool)],
                                  seed=seed + i, spacing=spacing)
+        yield name, img, msk, sp
+        produced += 1
+        i += 1
+
+
+def mixed_traffic_stream(n, seed=0, huge_every=16, small_dims=None,
+                         huge_dims=(96, 96, 96), spacing=(1.0, 1.0, 1.0)):
+    """Mixed service traffic: many small ROIs plus rare huge cases.
+
+    The workload shape of the serving tier (clinic-sized single studies
+    interleaved with occasional research-cohort volumes): every
+    ``huge_every``-th case uses ``huge_dims``, the rest cycle a pool of
+    small dimensions.  Yields ``(name, image, mask, spacing)`` like
+    :func:`stream_cases`; ``huge_every=0`` disables the huge cases.
+    Drives ``launch/serve`` and ``benchmarks/serve_latency``.
+    """
+    if small_dims is None:
+        small_dims = [(24, 28, 32), (32, 36, 40), (28, 40, 34), (36, 30, 26)]
+    for i in range(n):
+        huge = bool(huge_every) and (i % huge_every == huge_every - 1)
+        dims = huge_dims if huge else small_dims[i % len(small_dims)]
+        name = f"{'huge' if huge else 'small'}-{i:05d}"
+        img, msk, sp = make_case(dims, seed=seed + i, spacing=spacing)
         yield name, img, msk, sp
 
 

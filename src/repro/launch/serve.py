@@ -1,91 +1,111 @@
-"""Production serving launcher: ``python -m repro.launch.serve --arch <id>``.
+"""Radiomics service CLI: ``python -m repro.launch.serve``.
 
-Builds a mesh over available devices, shards params/caches by the serving
-rules (KV caches seq-sharded over 'model' when the head count does not
-divide it — §Perf/1), prefills a prompt batch, and runs the jitted decode
-loop with throughput stats.
+Stands up the persistent extraction service (``serve/service``) over a
+backend and drives it with mixed multi-tenant traffic -- many small ROIs
+plus rare huge cases, the clinic-plus-research-cohort shape -- from
+concurrent client threads, then prints p50/p99 request latency, case
+throughput, and the service's window-fusion census.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke
+    PYTHONPATH=src python -m repro.launch.serve --backend ref --smoke
+
+``--deadline-ms`` attaches a deadline to every request (expired requests
+complete with a ``DeadlineExceeded`` error row instead of occupying a
+window slot); ``--queue-mb`` bounds the admission-control byte budget
+(submitters block on a full queue).  The gated benchmark twin of this
+demo is ``benchmarks/serve_latency.py``.
 """
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.mesh import make_host_mesh
-from repro.models.registry import get_config, get_model, list_archs
-from repro.parallel import sharding as shd
-from repro.serve.serve_step import make_serve_step
-
-# flash-decode cache layout + head_dim TP + pure-TP weights (no FSDP:
-# decode re-reads weights every step; see EXPERIMENTS.md §Perf/1)
-SERVE_RULES = {"cache_seq": "model", "head_dim": "model", "embed": None}
+from repro.core.pipeline import BatchedExtractor
+from repro.data.synthetic import mixed_traffic_stream
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=list_archs())
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--tokens", type=int, default=64)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--model-parallel", type=int, default=1)
-    ap.add_argument("--smoke", action="store_true")
+    ap = argparse.ArgumentParser(
+        description="drive the radiomics extraction service with mixed "
+                    "multi-tenant traffic")
+    ap.add_argument("--backend", default=None)
+    ap.add_argument("--families", default=None)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8,
+                    help="requests per client")
+    ap.add_argument("--batch", type=int, default=1,
+                    help="cases per request")
+    ap.add_argument("--huge-every", type=int, default=16,
+                    help="every Nth case is a huge ROI (0: none)")
+    ap.add_argument("--deadline-ms", type=float, default=None)
+    ap.add_argument("--queue-mb", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI-sized run")
     args = ap.parse_args(argv)
-
-    cfg = get_config(args.arch)
     if args.smoke:
-        cfg = cfg.reduced()
-    model = get_model(cfg)
-    mesh = make_host_mesh(args.model_parallel) if jax.device_count() > 1 else None
-    rules = SERVE_RULES if mesh is not None else None
+        args.clients, args.requests, args.huge_every = 2, 3, 5
 
-    max_len = args.prompt_len + args.tokens
-    rng = np.random.default_rng(0)
-    prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
-        jnp.int32,
-    )
+    bx = BatchedExtractor(backend=args.backend, prep="hint",
+                          schedule="static", families=args.families)
+    n_cases = args.clients * args.requests * args.batch
+    cases = list(mixed_traffic_stream(n_cases, seed=args.seed,
+                                      huge_every=args.huge_every))
 
-    with shd.use_mesh(mesh, rules):
-        params = model.init(jax.random.PRNGKey(0))
-        cache = model.init_cache(args.batch, max_len, dtype=jnp.float32)
-        if mesh is not None:
-            params = jax.tree.map(
-                jax.device_put, params,
-                shd.param_shardings(model.spec(), mesh, rules),
+    latencies: list = []
+    error_rows: list = []
+    lock = threading.Lock()
+
+    def client(cidx: int, svc):
+        mine = cases[cidx::args.clients]
+        for r in range(args.requests):
+            chunk = mine[r * args.batch:(r + 1) * args.batch]
+            if not chunk:
+                break
+            fut = svc.submit(
+                [(img, msk, sp) for _, img, msk, sp in chunk],
+                tenant=f"client-{cidx}",
+                deadline_s=(None if args.deadline_ms is None
+                            else args.deadline_ms / 1e3),
             )
-            cache = jax.tree.map(
-                jax.device_put, cache,
-                shd.tree_shardings(cache, model.cache_axes(), mesh, rules),
-                is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, dict),
-            )
-        step = jax.jit(make_serve_step(model, temperature=args.temperature),
-                       donate_argnums=(1,))
+            res = fut.result(timeout=600)
+            with lock:
+                latencies.append(res.latency_s)
+                error_rows.extend(res.errors.values())
 
+    with bx.serve(max_queue_bytes=(None if args.queue_mb is None
+                                   else args.queue_mb * 2**20)) as svc:
         t0 = time.perf_counter()
-        for i in range(args.prompt_len):
-            _, _, cache = step(params, cache, prompts[:, i : i + 1],
-                               jax.random.PRNGKey(i))
-        jax.block_until_ready(cache["pos"])
-        t_prefill = time.perf_counter() - t0
+        threads = [threading.Thread(target=client, args=(c, svc))
+                   for c in range(args.clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        dt = time.perf_counter() - t0
+        stats = svc.stats()
 
-        tok = prompts[:, -1:]
-        t0 = time.perf_counter()
-        for i in range(args.tokens):
-            tok, _, cache = step(params, cache, tok, jax.random.PRNGKey(10_000 + i))
-        jax.block_until_ready(tok)
-        t_decode = time.perf_counter() - t0
-
-    print(f"[serve] arch={cfg.name} devices={jax.device_count()} "
-          f"mesh={dict(mesh.shape) if mesh else None}")
-    print(f"[serve] prefill {args.prompt_len} tok: {t_prefill*1e3:.1f} ms; "
-          f"decode {args.tokens} tok: {t_decode*1e3:.1f} ms "
-          f"({args.batch*args.tokens/t_decode:.1f} tok/s)")
+    lat = np.asarray(latencies)
+    served = stats["served_cases"]
+    fused = stats["window_cases"]
+    cross = sum(1 for t in stats["window_tenants"] if t > 1)
+    print(f"[serve] backend={bx.backend} families={bx.families} "
+          f"clients={args.clients} requests/client={args.requests} "
+          f"batch={args.batch}")
+    print(f"[serve] {served} cases in {dt:.2f}s "
+          f"({served / dt:.1f} cases/s), {stats['windows']} windows "
+          f"(mean fused {np.mean(fused):.1f}, {cross} cross-tenant)")
+    print(f"[serve] request latency p50 {np.percentile(lat, 50) * 1e3:.1f} ms, "
+          f"p99 {np.percentile(lat, 99) * 1e3:.1f} ms "
+          f"(max {lat.max() * 1e3:.1f} ms)")
+    if stats["expired_cases"]:
+        print(f"[serve] {stats['expired_cases']} cases expired at "
+              f"deadline {args.deadline_ms} ms")
+    if error_rows:
+        print(f"[serve] {len(error_rows)} error rows "
+              f"(deadline/quarantine)")
 
 
 if __name__ == "__main__":

@@ -45,6 +45,20 @@ Decisions served (wired through ``core/executor``):
     With fewer than two measured depths (fresh cache, 'ref' backend) the
     conservative :data:`DEFAULT_BREAK_EVEN_DEPTH` applies.
 
+``deadline_at_risk(census, slack_us)``
+    The serving tier's latency-vs-throughput decision
+    (``serve/service.py`` -- PR 8): every decision above optimises
+    THROUGHPUT, but a persistent service also owes each request its
+    deadline.  The open window's modeled collect cost
+    (:meth:`CostModel.window_cost_us`: the diameter sweeps, which
+    dominate per Table 2, plus one sync per cap group) is compared
+    against the slack remaining before the OLDEST pending deadline; once
+    the cost -- times a :data:`DEADLINE_SAFETY` margin for everything
+    the model cannot see (MC, staging, drain) -- reaches the slack, the
+    window must close NOW, even though throughput alone would keep
+    absorbing cases.  No deadline pending means no latency pressure and
+    the throughput rules above decide alone.
+
 Determinism contract (tier-1-locked): every decision is a pure function
 of (backend, cache file contents, plan metadata) -- with sweeps/probes
 disabled (``REPRO_AUTOTUNE=0``) the model never measures, never writes,
@@ -54,6 +68,7 @@ an auto-configured run reproducible from its committed cache.
 from __future__ import annotations
 
 import os
+import warnings
 
 from repro.core import plan as planlib
 from repro.runtime import autotune
@@ -77,11 +92,39 @@ MAX_PROBED_DEPTH = 64
 DEFAULT_WINDOW_MEM_MB = 512.0
 DEFAULT_WINDOW_MAX_CASES = 256
 
+# safety margin on the modeled window cost when weighing it against a
+# request deadline: the model only sees the diameter sweeps + syncs, not
+# MC, staging, or the drain itself, so it under-estimates wall time
+DEADLINE_SAFETY = 2.0
+
+# environment variables already warned about this process (warn ONCE per
+# variable: a streaming run reads the budget on every CostModel build)
+_warned_env: set = set()
+
 
 def _env_float(name: str, default: float) -> float:
+    """Float from the environment; malformed values warn ONCE and fall back.
+
+    An unset (or empty) variable is simply the default -- only a value
+    that is present but unparseable warns: a typo'd
+    ``REPRO_STREAM_MEM_MB=512MB`` silently becoming 512 MiB-the-default
+    is exactly the kind of config rot a long-running service never
+    notices (the satellite bugfix of PR 8).
+    """
+    raw = os.environ.get(name)
+    if raw is None or raw == "":
+        return default
     try:
-        return float(os.environ.get(name, ""))
+        return float(raw)
     except ValueError:
+        if name not in _warned_env:
+            _warned_env.add(name)
+            warnings.warn(
+                f"malformed {name}={raw!r} in the environment; "
+                f"falling back to the default {default!r}",
+                RuntimeWarning,
+                stacklevel=2,
+            )
         return default
 
 
@@ -219,6 +262,45 @@ class CostModel:
                 counted += self.diameter_case_us(tight, depth)
                 static += self.diameter_case_us(target, depth)
         return "counted" if counted <= static else "static"
+
+    # -- decision: latency vs throughput (the serving tier) ------------------
+
+    def window_cost_us(self, census: planlib.WindowCensus) -> float:
+        """Modeled collect-side cost of the OPEN window, in microseconds.
+
+        The diameter sweeps dominate extraction (95.7-99.9% per the
+        paper's Table 2), so the model is their per-(cap, depth) cost
+        off the measured tables -- the same lookups
+        :meth:`choose_schedule` uses -- plus one d2h sync per cap group.
+        Deliberately an under-estimate of wall time (no MC, staging, or
+        drain term): callers weighing it against a deadline apply
+        :data:`DEADLINE_SAFETY`.
+        """
+        total = 0.0
+        for cap, depth in census.cap_depths.items():
+            d = autotune.batch_bucket(max(1, depth))
+            total += self.sync_cost_us()
+            total += depth * self.diameter_case_us(cap, d)
+        return total
+
+    def deadline_at_risk(self, census: planlib.WindowCensus,
+                         slack_us: float | None,
+                         safety: float = DEADLINE_SAFETY) -> bool:
+        """Must the open window close NOW to honour its oldest deadline?
+
+        ``slack_us`` is the time remaining until the oldest pending
+        deadline among the window's requests (``None``: no deadline, no
+        latency pressure).  True once the modeled window cost, padded by
+        ``safety``, reaches the slack -- the first latency-vs-throughput
+        decision in the pipeline: a throughput-optimal window keeps
+        absorbing cases, a deadline-safe one stops batching and ships.
+        An already-expired deadline (slack <= 0) always closes.
+        """
+        if census.cases == 0 or slack_us is None:
+            return False
+        if slack_us <= 0:
+            return True
+        return self.window_cost_us(census) * safety >= slack_us
 
     # -- decision: adaptive stream windows -----------------------------------
 

@@ -469,10 +469,15 @@ class ResilientRunner:
         slow = self.straggler.observe(widx, dt)
         if slow:
             report.stragglers.append((widx, dt))
+        errors = stats.get("errors", {})
         for j, ((cid, name), row) in enumerate(zip(recs, rows)):
-            # rows align with recs by construction; error rows are NaN
-            if np.isnan(np.asarray(row)).any():
-                err = stats.get("errors", {}).get(j, "quarantined")
+            # rows align with recs by construction.  Quarantine is keyed
+            # off the executor's authoritative window-relative ``errors``
+            # map -- NOT by sniffing NaN in the row, which would silently
+            # misrecord a legitimate feature row that happens to contain
+            # a NaN value as quarantined.
+            if j in errors:
+                err = errors[j]
                 wrote = self.manifest.record(
                     cid, "error", name=name, error=err, window=widx
                 )
@@ -534,8 +539,13 @@ class ResilientRunner:
                 except (KeyboardInterrupt, SystemExit):
                     raise
                 except Exception as e:
-                    # load error: no content to hash -- quarantine by name
-                    eid = f"{name or 'case'}@{index}"
+                    # load error: no content to hash -- quarantine under
+                    # a STABLE name-keyed id, so a resume over a filtered
+                    # or reordered stream recognises the record instead of
+                    # recording the same failing case under a new
+                    # position-dependent id and double-counting it.  The
+                    # stream index is a tiebreaker for anonymous cases only.
+                    eid = f"load-error:{name}" if name else f"load-error:@{index}"
                     if man.record(eid, "error", name=name,
                                   error=f"{type(e).__name__}: {e}"):
                         report.processed += 1
@@ -546,7 +556,7 @@ class ResilientRunner:
                 if cid in man.done:
                     report.skipped += 1
                     continue
-                buf.append((cid, name, ex._prep_case_safe(case, fields=ex.prune)))
+                buf.append((cid, name, ex.prep_case(case)))
                 if len(buf) >= self.window:
                     # submit k+1 BEFORE draining k: the stream overlap
                     state = ex.submit_prepped([p for _, _, p in buf])

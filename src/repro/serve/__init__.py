@@ -1,1 +1,16 @@
-"""Serving substrate: decode steps, sampling, batched engine."""
+"""Serving tier: the persistent multi-tenant extraction service (PR 8).
+
+``service`` is the radiomics-as-a-service driver (cross-tenant window
+fusion, deadlines, backpressure); ``serve_step`` is the older decode-
+step scaffold kept for the sampling utilities.
+"""
+from repro.serve.service import (  # noqa: F401  (re-exports)
+    DeadlineExceeded,
+    ExtractionService,
+    ServeFuture,
+    ServeResult,
+    ServiceClosed,
+    ServiceError,
+    ServiceOverloaded,
+    estimate_case_bytes,
+)

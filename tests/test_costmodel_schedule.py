@@ -337,3 +337,32 @@ def test_plan_census_and_meta_bytes():
     assert c.fragments(other)  # new shape bucket (same cap bucket)
     c.add(other)
     assert c.cap_depths == {4096: 2}
+
+
+def test_env_float_warns_once_on_malformed(monkeypatch):
+    import warnings
+
+    monkeypatch.setenv("REPRO_STREAM_MEM_MB", "lots")
+    costmodel._warned_env.discard("REPRO_STREAM_MEM_MB")
+    # malformed: warn ONCE naming the variable, fall back to the default
+    with pytest.warns(RuntimeWarning, match="REPRO_STREAM_MEM_MB"):
+        assert costmodel._env_float("REPRO_STREAM_MEM_MB", 512.0) == 512.0
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        # once per process: the second malformed read is silent
+        assert costmodel._env_float("REPRO_STREAM_MEM_MB", 512.0) == 512.0
+        # unset and well-formed values never warn
+        monkeypatch.delenv("REPRO_STREAM_MEM_MB")
+        assert costmodel._env_float("REPRO_STREAM_MEM_MB", 1.5) == 1.5
+        monkeypatch.setenv("REPRO_STREAM_MEM_MB", "256")
+        assert costmodel._env_float("REPRO_STREAM_MEM_MB", 1.5) == 256.0
+    costmodel._warned_env.discard("REPRO_STREAM_MEM_MB")
+
+
+def test_malformed_stream_env_falls_back_in_cost_model(monkeypatch):
+    monkeypatch.setenv("REPRO_STREAM_MAX_CASES", "many")
+    costmodel._warned_env.discard("REPRO_STREAM_MAX_CASES")
+    with pytest.warns(RuntimeWarning, match="REPRO_STREAM_MAX_CASES"):
+        cm = costmodel.CostModel("ref")
+    assert cm.window_max_cases == costmodel.DEFAULT_WINDOW_MAX_CASES
+    costmodel._warned_env.discard("REPRO_STREAM_MAX_CASES")

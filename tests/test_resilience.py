@@ -375,12 +375,119 @@ def test_resilient_runner_load_error_quarantined_and_stable(tmp_path):
     ).run(cases)
     assert rep.processed == 4 and rep.quarantined == 1
     err = [r for r in man.rows() if r["status"] == "error"]
-    assert len(err) == 1 and err[0]["id"] == "case-002@2"
+    # STABLE id: keyed by the case NAME, not by its stream position
+    assert len(err) == 1 and err[0]["id"] == "load-error:case-002"
     # a second pass re-quarantines idempotently (same id -> skip)
     rep2 = ResilientRunner(
         BatchedExtractor(schedule="static", prep="hint"), man, window=2
     ).run(cases)
     assert rep2.processed == 0 and rep2.skipped == 4
+
+
+def test_resume_after_load_error_over_filtered_stream(tmp_path):
+    """A resume that filters/reorders the stream must not double-count a
+    load-error case: its quarantine id is name-keyed, not position-keyed
+    (the old ``name@index`` id changed whenever earlier cases were
+    filtered out, so the same failing case was recorded twice)."""
+    cases = _cases(5)
+
+    def dead():
+        raise OSError("gone")
+
+    cases[3] = ("case-003", dead)
+    man = RunManifest(tmp_path / "m.jsonl")
+    rep = ResilientRunner(
+        BatchedExtractor(schedule="static", prep="hint"), man, window=2
+    ).run(cases)
+    assert rep.processed == 5 and rep.quarantined == 1
+    man.close()
+
+    # resume over a FILTERED + REORDERED stream: done cases dropped, the
+    # failing case now at stream index 0 (it was at index 3)
+    man2 = RunManifest(tmp_path / "m.jsonl")
+    rep2 = ResilientRunner(
+        BatchedExtractor(schedule="static", prep="hint"), man2, window=2
+    ).run([cases[3], cases[4], cases[1]])
+    assert rep2.processed == 0 and rep2.skipped == 3  # nothing re-recorded
+    ids = [r["id"] for r in man2.rows()]
+    assert len(ids) == 5 == len(set(ids))  # zero lost, zero duplicated
+
+
+class _PartialNaNExecutor:
+    """Fake executor whose window contains a LEGIT row with a NaN feature
+    (tag 7 in the mask corner) next to a truly quarantined case (tag 9,
+    all-NaN row + an ``errors`` entry) -- the discriminating fixture for
+    the errors-map-vs-NaN-sniffing contract.  No real feature pipeline
+    produces a partial-NaN legit row (GLCM defines the zero-variance
+    correlation as 1.0), hence the fabrication."""
+
+    n_features = 7
+    prune = True
+
+    def prep_case(self, case):
+        return case
+
+    def submit_prepped(self, prepped):
+        return list(prepped)
+
+    def collect_window(self, window):
+        rows, errors = [], {}
+        for j, (img, msk, sp) in enumerate(window):
+            tag = float(np.asarray(msk)[0, 0, 0])
+            if tag == 9.0:
+                rows.append(np.full(7, np.nan, np.float32))
+                errors[j] = "ValueError: poisoned"
+            elif tag == 7.0:
+                row = np.arange(7, dtype=np.float32)
+                row[3] = np.nan  # a NaN VALUE in an otherwise-good row
+                rows.append(row)
+            else:
+                rows.append(np.full(7, float(j), np.float32))
+        return rows, {"errors": errors}
+
+
+def test_partial_nan_legit_row_not_misrecorded_as_quarantined(tmp_path):
+    """Quarantine must key off the executor's ``stats['errors']`` map; a
+    legitimate feature row that happens to CONTAIN a NaN value is
+    ``done``, not ``error`` (this fails on NaN-sniffing ``_collect``)."""
+    def tagged(tag, fill):
+        msk = np.full((4, 4, 4), fill, np.float32)
+        msk[0, 0, 0] = tag
+        return np.zeros((4, 4, 4), np.float32), msk, (1.0, 1.0, 1.0)
+
+    cases = [("plain",) + tagged(0, 1), ("nan-feature",) + tagged(7, 2),
+             ("poisoned",) + tagged(9, 3)]
+    man = RunManifest(tmp_path / "m.jsonl")
+    rep = ResilientRunner(_PartialNaNExecutor(), man, window=3).run(cases)
+    assert rep.processed == 3
+    assert rep.quarantined == 1  # ONLY the case with an errors entry
+    by_name = {r["name"]: r for r in man.rows()}
+    assert by_name["poisoned"]["status"] == "error"
+    assert by_name["poisoned"]["error"] == "ValueError: poisoned"
+    assert by_name["plain"]["status"] == "done"
+    rec = by_name["nan-feature"]
+    assert rec["status"] == "done"  # NaN value does not imply quarantine
+    feats = list(rec["features"].values())
+    assert np.isnan(feats[3]) and not np.isnan(feats[2])
+
+
+def test_stream_cases_skip_yields_promised_count():
+    from repro.data.synthetic import stream_cases
+
+    full = list(stream_cases(6, seed=3))
+    out = list(stream_cases(6, seed=3,
+                            skip={"case-00001", "case-00003"}))
+    assert len(out) == 6  # the promised count, not 4
+    assert [n for n, *_ in out] == [
+        "case-00000", "case-00002", "case-00004",
+        "case-00005", "case-00006", "case-00007",
+    ]
+    # surviving cases stay content-identical to the unskipped stream
+    by_name = {n: (img, msk) for n, img, msk, _ in full}
+    for n, img, msk, _ in out:
+        if n in by_name:
+            np.testing.assert_array_equal(img, by_name[n][0])
+            np.testing.assert_array_equal(msk, by_name[n][1])
 
 
 def test_runner_rejects_non_integer_window(tmp_path):

@@ -1,0 +1,299 @@
+"""Serving-tier lockdown: parity, fusion, deadlines, backpressure, demux.
+
+The contracts under test (see serve/service.py + core/pipeline.py's
+Serving section):
+
+* **parity** -- rows served through the multi-tenant driver are
+  bit-identical to ``extract_stream`` on the same cases (ref AND
+  interpret backends): window fusion must never change a feature value;
+* **cross-tenant fusion** -- concurrently queued requests from different
+  tenants share windows (the driver is plugged with a blocking loader to
+  make the queue state deterministic);
+* **deadlines** -- a request that expires while queued completes with
+  ``DeadlineExceeded`` error rows, never occupies a window slot, and
+  does not stall or perturb co-tenant rows; ``CostModel.window_cost_us``
+  / ``deadline_at_risk`` (the latency-vs-throughput decision) behave
+  sanely at the unit level;
+* **backpressure** -- admission is bounded by estimated queue bytes:
+  ``block=False`` raises ``ServiceOverloaded``, a blocking submit times
+  out while the budget is held, and frees admit it; an oversize request
+  is admitted only against an empty queue;
+* **demux** -- a batch request's rows come back in ITS OWN input order
+  with quarantine errors keyed by the request's case index.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.pipeline import BatchedExtractor
+from repro.data.synthetic import make_case, mixed_traffic_stream
+from repro.serve.service import (
+    ExtractionService,
+    ServiceClosed,
+    ServiceOverloaded,
+    estimate_case_bytes,
+)
+
+pytestmark = pytest.mark.tier1
+
+
+@pytest.fixture(autouse=True)
+def _isolated_autotune(tmp_path, monkeypatch):
+    # parity must not depend on (or pollute) the user's autotune cache
+    monkeypatch.setenv("REPRO_AUTOTUNE", "0")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "autotune.json"))
+
+
+def _cases(n, shape=(20, 18, 16)):
+    return [make_case(shape, seed=40 + i) for i in range(n)]
+
+
+class _Plug:
+    """Loader that blocks the driver inside prep until released.
+
+    While the driver is parked here, everything submitted afterwards is
+    guaranteed to be QUEUED together -- the deterministic setup for the
+    fusion / deadline / backpressure tests.
+    """
+
+    def __init__(self, case):
+        self.entered = threading.Event()
+        self.release = threading.Event()
+        self._case = case
+
+    def __call__(self):
+        self.entered.set()
+        assert self.release.wait(60), "plug never released"
+        return self._case
+
+
+# ---------------------------------------------------------------------------
+# parity: served rows == extract_stream rows, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_served_rows_bit_identical_to_stream(backend):
+    bx = BatchedExtractor(backend=backend, prep="hint", schedule="static")
+    cases = _cases(5) + [make_case((26, 22, 18), seed=91)]
+    ref = [np.asarray(r) for r in bx.extract_stream(iter(cases), window=3)]
+    with bx.serve() as svc:
+        # mixed single and batch submits from two tenants
+        futs = [svc.submit([cases[0], cases[1]], tenant="a"),
+                svc.submit([cases[2]], tenant="b"),
+                svc.submit(cases[3:], tenant="a")]
+        got = [np.asarray(r) for f in futs for r in f.result(timeout=600).rows]
+        assert all(not f.result().errors for f in futs)
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_serve_facade_and_loader_cases():
+    bx = BatchedExtractor(backend="ref")
+    case = _cases(1)[0]
+    (ref_row,), _ = bx.run([case])
+    svc = bx.serve()
+    try:
+        fut = svc.submit_case(lambda: case, shape_hints=None, tenant="lazy")
+        res = fut.result(timeout=600)
+        assert res.ok and not res.late
+        np.testing.assert_array_equal(np.asarray(res.rows[0]),
+                                      np.asarray(ref_row))
+        assert res.latency_s > 0
+    finally:
+        svc.close()
+    with pytest.raises(ServiceClosed):
+        svc.submit_case(case)
+
+
+# ---------------------------------------------------------------------------
+# cross-tenant fusion
+# ---------------------------------------------------------------------------
+
+
+def test_cross_tenant_requests_fuse_into_shared_windows():
+    bx = BatchedExtractor(backend="ref", prep="hint", schedule="static")
+    cases = _cases(4)
+    plug = _Plug(cases[0])
+    with bx.serve() as svc:
+        f0 = svc.submit([plug], tenant="a")
+        assert plug.entered.wait(30)
+        # driver is parked inside prep: these queue up behind the plug
+        f1 = svc.submit([cases[1], cases[2]], tenant="b")
+        f2 = svc.submit([cases[3]], tenant="c")
+        plug.release.set()
+        for f in (f0, f1, f2):
+            assert not f.result(timeout=600).errors
+        stats = svc.stats()
+    # 3 requests, fewer windows, and at least one window is multi-tenant
+    assert stats["requests"] == 3
+    assert stats["windows"] < 3
+    assert any(t > 1 for t in stats["window_tenants"])
+    # fusion must not change the rows
+    ref, _ = bx.run(cases)
+    got = [f0.result().rows[0], *f1.result().rows, *f2.result().rows]
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# deadlines
+# ---------------------------------------------------------------------------
+
+
+def test_expired_request_errors_without_stalling_cotenants():
+    bx = BatchedExtractor(backend="ref", prep="hint", schedule="static")
+    cases = _cases(4)
+    ref, _ = bx.run(cases)
+    plug = _Plug(cases[0])
+    with bx.serve() as svc:
+        f_plug = svc.submit([plug], tenant="live")
+        assert plug.entered.wait(30)
+        f_live = svc.submit([cases[1], cases[2]], tenant="live")
+        f_dead = svc.submit([cases[3]], tenant="hurried", deadline_s=0.01)
+        time.sleep(0.05)  # the deadline passes while the request is queued
+        plug.release.set()
+        live, dead = f_live.result(timeout=600), f_dead.result(timeout=600)
+        stats = svc.stats()
+    # expired: per-case DeadlineExceeded errors, all-NaN rows, no window
+    assert set(dead.errors) == {0}
+    assert "DeadlineExceeded" in dead.errors[0]
+    assert np.isnan(np.asarray(dead.rows[0])).all()
+    assert stats["expired_cases"] == 1
+    # co-tenant rows untouched and bit-identical
+    assert not live.errors and not f_plug.result().errors
+    np.testing.assert_array_equal(np.asarray(f_plug.result().rows[0]),
+                                  np.asarray(ref[0]))
+    for a, b in zip(ref[1:3], live.rows):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_deadline_at_risk_closes_early_at_unit_level():
+    from repro.core import plan as planlib
+
+    bx = BatchedExtractor(backend="ref")
+    cm = bx.cost_model
+    census = planlib.WindowCensus()
+    # empty window / no deadline: never at risk
+    assert not cm.deadline_at_risk(census, 5.0)
+    assert not cm.deadline_at_risk(census, None)
+    img, msk, sp = _cases(1)[0]
+    p = bx.executor.prep_case((img, msk, sp))
+    census.add(bx.executor.case_meta(p))
+    cost = cm.window_cost_us(census)
+    assert cost > 0
+    # monotone: more cases in the window cannot get cheaper
+    census.add(bx.executor.case_meta(p))
+    assert cm.window_cost_us(census) >= cost
+    # generous slack: safe; tiny or spent slack: at risk
+    assert not cm.deadline_at_risk(census, 1e12)
+    assert cm.deadline_at_risk(census, 1e-3)
+    assert cm.deadline_at_risk(census, 0.0)
+    assert cm.deadline_at_risk(census, -5.0)
+
+
+# ---------------------------------------------------------------------------
+# backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_admission_control_bounds_queue_bytes():
+    bx = BatchedExtractor(backend="ref")
+    cases = _cases(4)
+    b = estimate_case_bytes(cases[0])
+    assert b > 0
+    plug = _Plug(cases[0])
+    # budget: the plug + one queued case fit, a second queued case does not
+    with bx.serve(max_queue_bytes=2.5 * b) as svc:
+        svc.loader_case_bytes = b  # charge the plug like a real case
+        f0 = svc.submit([plug], tenant="a")
+        assert plug.entered.wait(30)
+        f1 = svc.submit([cases[1]], tenant="b")
+        with pytest.raises(ServiceOverloaded):
+            svc.submit([cases[2]], tenant="c", block=False)
+        t0 = time.perf_counter()
+        with pytest.raises(ServiceOverloaded):
+            svc.submit([cases[2]], tenant="c", timeout=0.2)
+        assert time.perf_counter() - t0 >= 0.2
+        plug.release.set()
+        # rows resolve, bytes free, the same submit is admitted
+        assert not f0.result(timeout=600).errors
+        f2 = svc.submit([cases[2]], tenant="c", timeout=600)
+        assert not f1.result(timeout=600).errors
+        assert not f2.result(timeout=600).errors
+
+
+def test_oversize_request_admitted_only_against_empty_queue():
+    bx = BatchedExtractor(backend="ref")
+    case = _cases(1)[0]
+    b = estimate_case_bytes(case)
+    with bx.serve(max_queue_bytes=b / 2) as svc:
+        # bigger than the whole budget, but the queue is empty: admitted
+        res = svc.submit([case], tenant="big").result(timeout=600)
+        assert res.ok
+
+
+def test_estimate_case_bytes_modes():
+    img, msk, sp = _cases(1)[0]
+    b = estimate_case_bytes((img, msk, sp))
+    assert b > 0
+    # intensity families stage the image next to the mask: costlier
+    assert estimate_case_bytes((img, msk, sp), needs_intensity=True) > b
+    # a loader with a shape hint prices like the equivalent tuple
+    hinted = estimate_case_bytes(lambda: (img, msk, sp),
+                                 shape_hint=msk.shape)
+    assert hinted == estimate_case_bytes((img, msk, sp))
+    # no hint, no shape: the flat default
+    from repro.serve.service import DEFAULT_LOADER_CASE_BYTES
+    assert (estimate_case_bytes(lambda: (img, msk, sp))
+            == DEFAULT_LOADER_CASE_BYTES)
+
+
+# ---------------------------------------------------------------------------
+# demux + quarantine through the service
+# ---------------------------------------------------------------------------
+
+
+def test_batch_demux_preserves_request_order_with_quarantine():
+    bx = BatchedExtractor(backend="ref")
+    good = _cases(3)
+    img, msk, sp = good[1]
+    bad_mask = np.asarray(msk, np.float32).copy()
+    bad_mask[10, 9, 8] = np.nan  # poisoned: quarantined at prep
+    batch = [good[0], (img, bad_mask, sp), good[2]]
+    ref, _ = bx.run(good)
+    with bx.serve() as svc:
+        res = svc.submit(batch, tenant="mixed").result(timeout=600)
+        stats = svc.stats()
+    # the poisoned case errors AT ITS REQUEST INDEX with an all-NaN row
+    assert set(res.errors) == {1}
+    assert np.isnan(np.asarray(res.rows[1])).all()
+    assert not res.ok
+    assert stats["quarantined_cases"] == 1
+    # neighbours are bit-identical to a run without the poison
+    np.testing.assert_array_equal(np.asarray(res.rows[0]), np.asarray(ref[0]))
+    np.testing.assert_array_equal(np.asarray(res.rows[2]), np.asarray(ref[2]))
+
+
+def test_mixed_traffic_stream_shapes():
+    out = list(mixed_traffic_stream(7, huge_every=3, huge_dims=(48, 48, 48)))
+    assert len(out) == 7
+    names = [n for n, *_ in out]
+    # every 3rd case is the huge one, the rest are small
+    assert [n.startswith("huge") for n in names] == \
+        [i % 3 == 2 for i in range(7)]
+    assert out[2][1].shape == (48, 48, 48)
+    assert out[0][1].shape != (48, 48, 48)
+
+
+def test_service_driver_survives_and_reports_on_close():
+    bx = BatchedExtractor(backend="ref")
+    svc = ExtractionService(bx)
+    res = svc.submit_case(_cases(1)[0]).result(timeout=600)
+    assert res.ok
+    svc.close()
+    svc.close()  # idempotent
+    with pytest.raises(ServiceClosed):
+        svc.submit_case(_cases(1)[0])
