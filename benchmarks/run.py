@@ -46,7 +46,9 @@ def _write_record(path: str, bench: str, suite: str, rows: list, ok: bool):
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", nargs="*", choices=SUITES, default=list(SUITES))
+    ap.add_argument("--only", nargs="*", metavar="SUITE",
+                    default=list(SUITES),
+                    help=f"suites to run (any of: {', '.join(SUITES)})")
     ap.add_argument("--full", action="store_true",
                     help="table2: run all 20 cases incl. the O(M^2) giants")
     ap.add_argument("--json", metavar="PATH", default=None,
@@ -54,6 +56,15 @@ def main(argv=None):
     ap.add_argument("--json-pipeline", metavar="PATH", default=None,
                     help="write the batched-throughput trajectory record here")
     args = ap.parse_args(argv)
+    # validate by hand: a bare ``--only`` (empty list) used to silently
+    # run NOTHING and exit 0, and an unknown name must die loudly
+    if not args.only:
+        ap.error(f"--only needs at least one suite name; valid suites: "
+                 f"{', '.join(SUITES)}")
+    unknown = [s for s in args.only if s not in SUITES]
+    if unknown:
+        ap.error(f"unknown suite(s) {', '.join(unknown)}; valid suites: "
+                 f"{', '.join(SUITES)}")
     if args.json is not None and "fig1" not in args.only:
         ap.error("--json records the fig1 suite; add fig1 to --only")
     if args.json_pipeline is not None and "pipeline" not in args.only:

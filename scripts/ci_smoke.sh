@@ -71,6 +71,15 @@ stage families python -m pytest -q -m tier1 \
 stage serve python -m pytest -q -m tier1 tests/test_service.py
 stage serve_smoke python -m repro.launch.serve --backend ref --smoke
 
+# 7) out-of-core tiling gates: tiled==in-core row parity across tile
+#    sizes, prune levels and backends plus the slab-reader contracts
+#    (tier-1 suite), then the forced-tiny-budget engine smoke through
+#    the CLI entry point (parity ladder + a volume streamed under a
+#    budget far below its materialized size)
+stage tiled python -m pytest -q -m tier1 \
+    tests/test_tiled_pipeline.py
+stage tiled_smoke python -m repro.launch.tiled_smoke --backend ref
+
 if [[ "${SMOKE_SKIP_BENCH:-0}" != "1" ]]; then
   # 6) kernel-wiring smoke: Fig.1 variant sweep (interpret mode) + the
   #    BENCH_diameter.json perf-trajectory record

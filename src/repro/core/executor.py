@@ -160,7 +160,8 @@ def _compact_cap(fields, cap: int):
 
 def _features_one(mask, spacing, vertex_cap, backend, variant, block=None,
                   mc_block=None, mc_chunk=None):
-    mc_kw = {} if mc_block is None else {"block": mc_block, "chunk": mc_chunk}
+    mc_kw = ({"block": mc_block, "chunk": mc_chunk} if mc_block is not None
+             else {"chunk": mc_chunk} if mc_chunk is not None else {})
     vol, area = ops.mc_volume_area(mask, 0.5, spacing, backend=backend, **mc_kw)
     fields = ops.vertex_fields(mask, 0.5, spacing)
     verts, vmask, n = ops.compact_vertices(fields, vertex_cap)
@@ -276,7 +277,9 @@ class PlanExecutor:
 
     def _resolve_mc(self, shape, depth: int = 1):
         if self.backend == "ref":
-            return None, None
+            # no brick block on ref; mc_chunk doubles as the scan slab
+            # depth (a memory lever the tiled engine shares)
+            return None, self.mc_chunk
         return dispatcher.mc_config(
             self.backend, shape, self.mc_block, self.mc_chunk, batch=depth
         )
@@ -1316,8 +1319,10 @@ class PlanExecutor:
                         p.verts, p.vmask, k_dirs=self.k_dirs
                     )
                 mc_block, mc_chunk = self._resolve_mc(p.shape)
-                mc_kw = ({} if mc_block is None
-                         else {"block": mc_block, "chunk": mc_chunk})
+                mc_kw = ({"block": mc_block, "chunk": mc_chunk}
+                         if mc_block is not None
+                         else {"chunk": mc_chunk}
+                         if mc_chunk is not None else {})
                 vol, area = ops.mc_volume_area(
                     p.mask, 0.5, p.spacing, backend=self.backend, **mc_kw
                 )

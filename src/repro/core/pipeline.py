@@ -126,6 +126,28 @@ cluster run *survivable*, not just fast:
   by ``tests/test_resilience.py`` (tier-1) and soaked at scale by
   ``benchmarks/soak.py``.
 
+Out-of-core tiling (``core/tiled``, PR 9) -- the path for volumes that
+do not fit the device (or even the host): a case may be a
+``data.tiles.TiledCase`` -- a pair of z-slab SOURCES (windowed NIfTI
+reads, in-memory arrays, or analytic generators) instead of materialized
+volumes.  The tiled engine runs the census prepass, cuts the padded
+frame into halo-exchanged z-tiles of whole marching-cubes granules, and
+re-folds per-tile partials in the in-core accumulation order, so the
+row is bit-identical to ``extract_one`` on any size both paths can run
+(tier-1-locked; ``tile_prune='bounds'`` relaxes only the ref-backend
+diameters to f32 rounding, the same contract as vertex pruning).
+Hierarchical tile pruning skips empty tiles outright and skips vertex
+work for tiles provably excluded from every farthest-pair combo.
+Routing: a ``TiledCase`` always takes this path; with ``tiled=True``,
+ordinary tuple cases whose staged frame would exceed the tile budget
+(``tile_mem_mb`` / ``REPRO_TILE_MEM_MB``) are converted and routed too.
+``run`` merges tiled rows back in input order; ``extract_stream`` flushes
+the surrounding in-core segments around each tiled case (inter-segment
+prep overlap is sacrificed -- tiled cases are assumed rare and huge;
+within a tiled case, tile k+1's device work is dispatched before tile
+k's partials are drained).  Surviving-tile metadata feeds the same
+``plan.WindowCensus`` machinery the cost model reads.
+
 Serving (``serve/service``, PR 8) -- the persistent multi-tenant front
 door over the same windows (``serve()`` below returns the service):
 
@@ -158,15 +180,19 @@ from __future__ import annotations
 
 from typing import Iterable, Sequence
 
+import numpy as np
 from jax.sharding import Mesh
 
 # re-exported planning primitives (public API since PR 1-3)
+from repro.core import plan as planlib
 from repro.core.executor import PlanExecutor
 from repro.core.plan import (  # noqa: F401  (re-exports)
     Bucket,
     assign_bucket,
     group_indices,
 )
+from repro.core.tiled import TiledExtractor
+from repro.data.tiles import TiledCase
 
 
 class BatchedExtractor:
@@ -204,7 +230,9 @@ class BatchedExtractor:
                  k_dirs: int = 16, device_compact: bool = True,
                  compact_block="auto", schedule: str = "counted",
                  prep: str = "count", transfer_callback=None, retry=None,
-                 families=None, n_bins: int = 32):
+                 families=None, n_bins: int = 32, tiled: bool = False,
+                 tile_prune: str = "bounds",
+                 tile_mem_mb: float | None = None):
         self.executor = PlanExecutor(
             backend=backend, variant=variant, mesh=mesh, data_axis=data_axis,
             prune=prune, mc_block=mc_block, mc_chunk=mc_chunk, k_dirs=k_dirs,
@@ -213,6 +241,11 @@ class BatchedExtractor:
             retry=retry, families=families, n_bins=n_bins,
         )
         ex = self.executor
+        self.tiled = bool(tiled)
+        self.tile_prune = tile_prune
+        self._tile_budget = (None if tile_mem_mb is None
+                             else int(tile_mem_mb * 2**20))
+        self._tiledx = None  # built on first tiled case (family-validated)
         self.families = ex.families
         self.n_features = ex.n_features
         self.n_bins = ex.n_bins
@@ -230,13 +263,90 @@ class BatchedExtractor:
         """The executor's decision layer (``runtime/costmodel.CostModel``)."""
         return self.executor.cost_model
 
+    @property
+    def tiled_extractor(self) -> TiledExtractor:
+        """The lazily-built out-of-core engine (``core/tiled``)."""
+        if self._tiledx is None:
+            self._tiledx = TiledExtractor(
+                self.executor, budget_bytes=self._tile_budget,
+                tile_prune=self.tile_prune,
+            )
+        return self._tiledx
+
+    def _route_tiled(self, case) -> bool:
+        """Should ``case`` take the out-of-core path?
+
+        A ``TiledCase`` always does (constructing one is the opt-in).
+        With ``tiled=True``, a materialized tuple whose staged frame
+        (mask + optional intensity, f32) would exceed the tile budget is
+        converted too; loader callables stay in-core -- their shape is
+        unknown until loaded (the serving layer's header peek handles
+        byte estimation separately).
+        """
+        if isinstance(case, TiledCase):
+            return True
+        if not self.tiled:
+            return False
+        if not (isinstance(case, (tuple, list)) and len(case) == 3):
+            return False
+        mask = np.asarray(case[1])
+        if mask.ndim != 3:
+            return False
+        staged = 4 * mask.size * (1 + int(self.executor._needs_intensity))
+        return staged > self.tiled_extractor.budget_bytes
+
+    def _as_tiled(self, case) -> TiledCase:
+        if isinstance(case, TiledCase):
+            return case
+        image, mask, spacing = case
+        return TiledCase(mask, image=image, spacing=spacing)
+
+    def extract_tiled(self, case):
+        """Run one case through the out-of-core tiled engine.
+
+        Accepts a ``TiledCase`` or an ``(image, mask, spacing)`` tuple;
+        returns its ``core.tiled.TiledResult`` (row + census metadata +
+        tile stats).
+        """
+        return self.tiled_extractor.extract(self._as_tiled(case))
+
     def run(self, cases: Sequence, batch_size: int | None = None):
         """Extract features for (image, mask, spacing) cases (one window).
 
         Returns a list of ``(self.n_features,)`` arrays in input order
         plus throughput stats ((7,) for the default shape-only request).
+        Cases routed out-of-core (see ``_route_tiled``) run through the
+        tiled engine and merge back in input order; their surviving-tile
+        metadata joins the stats as a ``plan.WindowCensus``.
         """
-        return self.executor.run(cases, batch_size)
+        cases = list(cases)
+        tiled_idx = [i for i, c in enumerate(cases) if self._route_tiled(c)]
+        if not tiled_idx:
+            return self.executor.run(cases, batch_size)
+        incore = [c for i, c in enumerate(cases) if i not in set(tiled_idx)]
+        if incore:
+            rows, stats = self.executor.run(incore, batch_size)
+        else:
+            rows, stats = [], {"cases": 0}
+        rows = list(rows)
+        census = planlib.WindowCensus()
+        tile_stats = []
+        for i in tiled_idx:
+            res = self.tiled_extractor.extract(self._as_tiled(cases[i]))
+            rows.insert(i, res.row)
+            census.add(res.meta)
+            tile_stats.append(res.stats)
+        stats = dict(stats)
+        stats["tiled"] = {
+            "cases": len(tiled_idx),
+            "census": census,
+            "tiles": sum(s.get("tiles", 0) for s in tile_stats),
+            "tiles_skipped": sum(s.get("tiles_skipped", 0)
+                                 for s in tile_stats),
+            "tiles_bounds_pruned": sum(s.get("tiles_bounds_pruned", 0)
+                                       for s in tile_stats),
+        }
+        return rows, stats
 
     def extract_batch(self, cases: Sequence, batch_size: int | None = None):
         """Alias of :meth:`run`: one window of the streaming machinery."""
@@ -253,11 +363,46 @@ class BatchedExtractor:
         ``window='auto'`` sizes windows adaptively from the running
         bucket census and the cost model (bit-identical rows to any
         fixed window).
+
+        Out-of-core cases (``TiledCase`` instances, or oversized tuples
+        with ``tiled=True``) are handled between in-core segments: the
+        preceding segment is flushed through the windowed machinery,
+        then the tiled case runs (tile-level submit/collect overlap),
+        then streaming resumes.  Rows still arrive in input order;
+        prep overlap ACROSS a tiled boundary is sacrificed.
         """
-        return self.executor.extract_stream(
-            cases, window=window, batch_size=batch_size,
-            stats_callback=stats_callback,
-        )
+        # validate eagerly: an all-tiled (or empty) stream would otherwise
+        # never reach the executor's own check
+        if window != "auto" and (not isinstance(window, int) or window < 1):
+            raise ValueError(
+                f"window must be a positive int or 'auto', got {window!r}"
+            )
+
+        def _segments():
+            seg = []
+            for case in cases:
+                if self._route_tiled(case):
+                    if seg:
+                        yield False, seg
+                        seg = []
+                    yield True, case
+                else:
+                    seg.append(case)
+            if seg:
+                yield False, seg
+
+        def _gen():
+            for is_tiled, item in _segments():
+                if is_tiled:
+                    yield self.tiled_extractor.extract(
+                        self._as_tiled(item)).row
+                else:
+                    yield from self.executor.extract_stream(
+                        item, window=window, batch_size=batch_size,
+                        stats_callback=stats_callback,
+                    )
+
+        return _gen()
 
     def extract_one(self, image, mask, spacing):
         """Single-case parity oracle (identical stages, no batching)."""

@@ -8,34 +8,68 @@ export quirk: 4D with one timepoint).  Enough to round-trip the
 synthetic KITS19-like suite and to ingest real CT volumes and
 segmentation masks.  Big-endian files are detected and rejected with a
 clear error rather than misread.
+
+Three access granularities share ONE parse/read path:
+
+* :func:`read_nifti_header` -- 352-byte peek (shape, dtype, spacing,
+  rescale, offset) without touching the data section.  Admission control
+  (``serve/service.py::estimate_case_bytes``) and the tile planner size
+  work from this alone.
+* :func:`read_nifti_slab` -- a windowed z-slab ``[z0, z1)`` read via
+  ``seek``: NIfTI stores Fortran order (x fastest), so a z-slab is one
+  contiguous byte range.  This is what lets ``data/tiles.py`` stream a
+  volume far larger than memory.  Refused for ``.nii.gz`` (a DEFLATE
+  stream cannot seek) with an error naming the workaround.
+* :func:`read_nifti` -- the full volume, implemented as a slab read over
+  the whole z-range (gz files are decompressed to an in-memory stream
+  first, which is the only way to random-access them).
 """
 from __future__ import annotations
 
 import gzip
+import io
 import struct
 from pathlib import Path
+from typing import NamedTuple
 
 import numpy as np
 
 _DTYPES = {2: np.uint8, 4: np.int16, 8: np.int32, 16: np.float32, 64: np.float64}
 _CODES = {np.dtype(v): k for k, v in _DTYPES.items()}
 
+_HDR_BYTES = 352  # 348-byte header + 4-byte extension flag
 
-def read_nifti(path):
-    """Returns (data (x,y,z) ndarray, spacing (3,) float32).
 
-    Applies the header's ``scl_slope``/``scl_inter`` intensity rescale
-    (``slope * stored + inter``, as float32) whenever it is a real
-    rescale -- slope outside {0, 1} or a nonzero intercept; a slope of 0
-    means "unset" per the standard and is treated as 1.  Files with more
-    than 3 dims are accepted when every trailing dim is 1 (squeezed
-    away); genuinely >3D data still raises.
+class NiftiHeader(NamedTuple):
+    """Parsed NIfTI-1 header: everything needed to plan a read.
+
+    ``shape`` has degenerate trailing dims already squeezed (so it is at
+    most 3-long); ``vox_offset`` is the byte offset of the data section;
+    ``gzipped`` records how the bytes on disk are stored, which decides
+    whether :func:`read_nifti_slab` can seek.
     """
-    path = Path(path)
-    raw = path.read_bytes()
-    if path.suffix == ".gz" or raw[:2] == b"\x1f\x8b":
-        raw = gzip.decompress(raw)
-    if len(raw) < 352:
+
+    shape: tuple
+    dtype: np.dtype
+    spacing: np.ndarray
+    vox_offset: int
+    scl_slope: float
+    scl_inter: float
+    gzipped: bool
+
+    @property
+    def shape3(self) -> tuple:
+        """``shape`` padded with trailing 1s to exactly 3 dims."""
+        return tuple(self.shape) + (1,) * (3 - len(self.shape))
+
+    @property
+    def data_bytes(self) -> int:
+        """Size of the stored data section (pre-rescale dtype)."""
+        return int(np.prod(self.shape, dtype=np.int64)) * self.dtype.itemsize
+
+
+def _parse_header(raw: bytes, gzipped: bool) -> NiftiHeader:
+    if len(raw) < _HDR_BYTES:
         raise ValueError("not a NIfTI-1 file (too short)")
     sizeof_hdr = struct.unpack_from("<i", raw, 0)[0]
     if sizeof_hdr != 348:
@@ -67,24 +101,134 @@ def read_nifti(path):
     magic = raw[344:348]
     if magic not in (b"n+1\x00", b"ni1\x00"):
         raise ValueError(f"bad NIfTI magic {magic!r}")
-    dt = np.dtype(_DTYPES[datatype]).newbyteorder("<")
-    count = int(np.prod(shape))
-    data = np.frombuffer(raw, dt, count=count, offset=vox_offset or 352)
-    # NIfTI stores Fortran order (x fastest)
-    data = data.reshape(shape, order="F")
-    data = np.ascontiguousarray(data)
+    spacing = np.asarray(pixdim[1:4], np.float32)
+    spacing[spacing == 0] = 1.0
+    return NiftiHeader(
+        shape=shape,
+        dtype=np.dtype(_DTYPES[datatype]).newbyteorder("<"),
+        spacing=spacing,
+        vox_offset=vox_offset or _HDR_BYTES,
+        scl_slope=float(scl_slope),
+        scl_inter=float(scl_inter),
+        gzipped=gzipped,
+    )
+
+
+def _is_gzipped(path: Path) -> bool:
+    if path.suffix == ".gz":
+        return True
+    with open(path, "rb") as f:
+        return f.read(2) == b"\x1f\x8b"
+
+
+def read_nifti_header(path) -> NiftiHeader:
+    """Peek the 352-byte header without reading the data section.
+
+    For ``.nii.gz`` this streams just enough of the DEFLATE stream to
+    decompress the header -- still O(1) in the volume size.
+    """
+    path = Path(path)
+    gzipped = _is_gzipped(path)
+    opener = gzip.open if gzipped else open
+    with opener(path, "rb") as f:
+        raw = f.read(_HDR_BYTES)
+    return _parse_header(raw, gzipped)
+
+
+def _apply_scl(data: np.ndarray, hdr: NiftiHeader) -> np.ndarray:
+    """Header intensity rescale (``slope * stored + inter``, float32).
+
+    Applied whenever it is a real rescale -- slope outside {0, 1} or a
+    nonzero intercept; a slope of 0 means "unset" per the standard and
+    is treated as 1.
+    """
+    scl_slope, scl_inter = hdr.scl_slope, hdr.scl_inter
     if (
         (scl_slope not in (0.0, 1.0) or scl_inter != 0.0)
         and np.isfinite(scl_slope)
         and np.isfinite(scl_inter)
     ):
-        # slope 0 with a real intercept means "slope unset": apply as 1
         slope = scl_slope if scl_slope != 0.0 else 1.0
         data = (np.float32(slope) * data.astype(np.float32)
                 + np.float32(scl_inter))
-    spacing = np.asarray(pixdim[1:4], np.float32)
-    spacing[spacing == 0] = 1.0
-    return data, spacing
+    return data
+
+
+def _slab_from_stream(f, hdr: NiftiHeader, z0: int, z1: int) -> np.ndarray:
+    """Read planes ``[z0, z1)`` from a seekable byte stream.
+
+    NIfTI data is Fortran order: flat offset of voxel ``(x, y, z)`` is
+    ``x + y*X + z*X*Y``, so a z-slab is a single contiguous byte range.
+    Returns an ``(X, Y, z1-z0)`` C-contiguous array (stored dtype,
+    rescale not yet applied).
+    """
+    nx, ny, nz = hdr.shape3
+    if not 0 <= z0 <= z1 <= nz:
+        raise ValueError(f"slab [{z0}, {z1}) out of range for nz={nz}")
+    plane = nx * ny * hdr.dtype.itemsize
+    f.seek(hdr.vox_offset + z0 * plane)
+    want = (z1 - z0) * plane
+    buf = f.read(want)
+    if len(buf) < want:
+        raise ValueError(
+            f"truncated NIfTI data section: wanted {want} bytes for planes "
+            f"[{z0}, {z1}), got {len(buf)}"
+        )
+    data = np.frombuffer(buf, hdr.dtype, count=nx * ny * (z1 - z0))
+    return np.ascontiguousarray(data.reshape((nx, ny, z1 - z0), order="F"))
+
+
+def read_nifti_slab(path, z0: int, z1: int):
+    """Windowed read of z-planes ``[z0, z1)`` without loading the volume.
+
+    Returns ``(slab (X, Y, z1-z0) ndarray, spacing (3,) float32)`` with
+    the header's intensity rescale applied (same rule as
+    :func:`read_nifti`).  Only uncompressed ``.nii`` can be windowed: a
+    ``.nii.gz`` DEFLATE stream has no random access, so it is refused
+    with the workaround spelled out rather than silently buffering the
+    whole file.
+    """
+    path = Path(path)
+    hdr = read_nifti_header(path)
+    if hdr.gzipped:
+        raise ValueError(
+            f"cannot read a slab from compressed NIfTI {path.name}: gzip "
+            "streams do not support seeking; decompress it first (e.g. "
+            "`gunzip` to a .nii file, or load fully via read_nifti)"
+        )
+    with open(path, "rb") as f:
+        slab = _slab_from_stream(f, hdr, z0, z1)
+    return _apply_scl(slab, hdr), hdr.spacing
+
+
+def read_nifti(path):
+    """Returns (data (x,y,z) ndarray, spacing (3,) float32).
+
+    Applies the header's ``scl_slope``/``scl_inter`` intensity rescale
+    (``slope * stored + inter``, as float32) whenever it is a real
+    rescale -- slope outside {0, 1} or a nonzero intercept; a slope of 0
+    means "unset" per the standard and is treated as 1.  Files with more
+    than 3 dims are accepted when every trailing dim is 1 (squeezed
+    away); genuinely >3D data still raises.
+
+    Implemented as a whole-z-range :func:`_slab_from_stream` read so the
+    windowed and full-volume loaders share one read path; ``.nii.gz``
+    is decompressed to an in-memory stream first.
+    """
+    path = Path(path)
+    if _is_gzipped(path):
+        raw = gzip.decompress(path.read_bytes())
+        hdr = _parse_header(raw[:_HDR_BYTES], gzipped=True)
+        stream = io.BytesIO(raw)
+    else:
+        hdr = read_nifti_header(path)
+        stream = open(path, "rb")
+    try:
+        data = _slab_from_stream(stream, hdr, 0, hdr.shape3[2])
+    finally:
+        stream.close()
+    data = data.reshape(hdr.shape)
+    return _apply_scl(data, hdr), hdr.spacing
 
 
 def write_nifti(path, data: np.ndarray, spacing=(1.0, 1.0, 1.0),

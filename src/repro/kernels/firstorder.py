@@ -169,6 +169,32 @@ def firstorder_stats_ref(image, mask, n_bins: int = N_BINS):
 
 
 @functools.partial(jax.jit, static_argnames=("n_bins",))
+def fold_packed_chunks(x, m, lo, hi, n_bins: int = N_BINS):
+    """Packed stats from a stack of TOUCHED canonical chunks (tiled path).
+
+    ``x``/``m``: (nt, CANON_CHUNK) masked values / mask lanes of the
+    mask-touched chunks of the padded frame, in ascending global chunk
+    order; ``lo``/``hi`` the order-invariant masked intensity range
+    (exact min/max, so a streaming census computes the same bits).  An
+    untouched chunk's :func:`_chunk_stats` partial is an exact +0.0
+    vector (zero lanes, ``m > 0`` nowhere), so folding ONLY the touched
+    chunks -- same body, same ascending order -- accumulates bit-
+    identically to the in-core full scan.  Quantization happens in-graph
+    from the same ``lo``/``hi`` (elementwise, shape-independent).
+    """
+    q, width = _ref.quantize_intensity(x, m, lo, hi, n_bins)
+
+    def body(acc, ch):
+        cx, cm, cq = ch
+        return acc + _chunk_stats(cx, cm, cq, n_bins), None
+
+    acc, _ = jax.lax.scan(
+        body, jnp.zeros((stats_width(n_bins),), jnp.float32), (x, m, q)
+    )
+    return jnp.concatenate([acc, jnp.stack([lo, hi, width])])
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins",))
 def firstorder_packed_batch_ref(images, masks, n_bins: int = N_BINS):
     """``(B, packed_width)`` oracle stats via the single-case fold, mapped.
 

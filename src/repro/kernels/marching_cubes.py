@@ -95,8 +95,15 @@ def _brick_cells(s, iso, x0, y0, z0, spacing, origin):
     return E, idx.reshape(-1)
 
 
-def _mc_kernel(scal, table_ref, brick, vol_out, area_out, *, chunk):
-    """One brick: fused table lookup (MXU one-hot matmul) + vol/area sums."""
+def _mc_kernel(scal, table_ref, brick, vol_out, area_out, *, chunk,
+               z_scal=False):
+    """One brick: fused table lookup (MXU one-hot matmul) + vol/area sums.
+
+    With ``z_scal`` (the tiled entry) ``scal`` carries an 8th element:
+    the window's global z offset in cells, added to the brick-local z
+    base.  Both are integer-valued f32 < 2^24, so the add is exact and
+    the brick computes with the SAME coordinates as the in-core grid.
+    """
     iso = scal[0]
     spacing = (scal[1], scal[2], scal[3])
     origin = (scal[4], scal[5], scal[6])
@@ -111,6 +118,8 @@ def _mc_kernel(scal, table_ref, brick, vol_out, area_out, *, chunk):
     x0 = (px_id * bx).astype(jnp.float32)
     y0 = (py_id * by).astype(jnp.float32)
     z0 = (pz_id * cz).astype(jnp.float32)
+    if z_scal:
+        z0 = z0 + scal[7]
 
     s = brick[0, 0, 0]
     E, idx = _brick_cells(s, iso, x0, y0, z0, spacing, origin)
@@ -236,6 +245,82 @@ def mc_volume_area_pallas(
         ],
         interpret=interpret,
     )(scal, jnp.asarray(mct.TRI_TABLE, jnp.float32), bricks)
+    return jnp.abs(jnp.sum(vol_p)), jnp.sum(area_p)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("full_shape", "block", "chunk", "interpret")
+)
+def mc_brick_partials_pallas(
+    slab,
+    iso=0.5,
+    spacing=(1.0, 1.0, 1.0),
+    *,
+    full_shape,
+    z_cell_offset=0.0,
+    block=(8, 8, 8),
+    chunk=512,
+    interpret=False,
+):
+    """Per-brick (signed volume, area) partials for one z-window of a volume.
+
+    The tiled-extraction entry: runs the SAME brick kernel as
+    :func:`mc_volume_area_pallas` over a window of ``z_cell_offset``-shifted
+    bricks, with the coordinate origin computed from ``full_shape`` (the
+    whole volume's centred origin), and returns the per-brick partial
+    arrays UNREDUCED.  The caller assembles the windows' partials into
+    the full (nbx, nby, nbz) brick grid -- zeros for windows that were
+    pruned away (a skipped empty brick contributes exactly +0.0) -- and
+    reduces once via :func:`mc_partials_finalize`, reproducing the
+    in-core reduction shape bit-for-bit.  ``z_cell_offset`` is traced
+    (f32, exact small integer): tiles at different depths share one
+    compiled kernel.
+
+    The window must span whole bricks: ``slab.shape[2] == k*cz + 1``.
+    """
+    slab = jnp.asarray(slab, jnp.float32)
+    bx, by, cz = block
+    chunk = normalize_chunk(block, chunk)
+    bricks, (nbx, nby, nbz) = _restack(slab, bx, by, cz)
+
+    sp = jnp.asarray(spacing, jnp.float32)
+    origin = -0.5 * jnp.asarray(list(full_shape), jnp.float32) * sp
+    scal = jnp.concatenate([
+        jnp.asarray([iso], jnp.float32), sp, origin,
+        jnp.asarray([z_cell_offset], jnp.float32),
+    ])
+
+    out_spec = pl.BlockSpec((1, 1, 1), lambda i, j, k: (i, j, k))
+    return pl.pallas_call(
+        functools.partial(_mc_kernel, chunk=chunk, z_scal=True),
+        grid=(nbx, nby, nbz),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((256, _NSLOTS), lambda i, j, k: (0, 0)),
+            pl.BlockSpec(
+                (1, 1, 1, bx + 1, by + 1, cz + 1),
+                lambda i, j, k: (i, j, k, 0, 0, 0),
+            ),
+        ],
+        out_specs=[out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((nbx, nby, nbz), jnp.float32),
+            jax.ShapeDtypeStruct((nbx, nby, nbz), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scal, jnp.asarray(mct.TRI_TABLE, jnp.float32), bricks)
+
+
+@jax.jit
+def mc_partials_finalize(vol_p, area_p):
+    """Reduce assembled full-grid brick partials: (|sum vol|, sum area).
+
+    The same two reductions :func:`mc_volume_area_pallas` ends with, over
+    an array of the same (nbx, nby, nbz) shape -- the reduction-tree
+    shape is what fixes the f32 accumulation order, so assembling tile
+    partials into the full grid first keeps the result bit-identical to
+    the in-core pass.
+    """
     return jnp.abs(jnp.sum(vol_p)), jnp.sum(area_p)
 
 

@@ -29,7 +29,11 @@ def mc_volume_area(vol, iso=0.5, spacing=(1.0, 1.0, 1.0), *, backend=None, **kw)
     """
     b = dispatcher.resolve_backend(backend)
     if b == "ref":
-        return _ref.mc_volume_area(vol, iso, spacing, chunk_z=kw.get("chunk_z", 32))
+        # the ref path's only configuration axis is the scan slab depth;
+        # honour a kernel-style ``chunk`` too so the executor's mc_chunk
+        # becomes the device-budget lever on every backend (tiled path)
+        chunk_z = kw.get("chunk_z", kw.get("chunk") or 32)
+        return _ref.mc_volume_area(vol, iso, spacing, chunk_z=chunk_z)
     block, chunk = kw.get("block", "auto"), kw.get("chunk")
     if block is None or block == "auto" or chunk is None:
         block, chunk = dispatcher.mc_config(b, np.shape(vol), block, chunk)
@@ -62,9 +66,11 @@ def mc_volume_area_batch(vols, iso=0.5, spacings=None, *, backend=None,
         spacings = jnp.ones((vols.shape[0], 3), jnp.float32)
     spacings = jnp.asarray(spacings, jnp.float32)
     if b == "ref":
+        chunk_z = chunk if isinstance(chunk, int) else 32
+
         def one(args):
             vol, sp = args
-            v, a = _ref.mc_volume_area(vol, iso, sp)
+            v, a = _ref.mc_volume_area(vol, iso, sp, chunk_z=chunk_z)
             return jnp.stack([v, a])
 
         return jax.lax.map(one, (vols, spacings))
@@ -81,6 +87,63 @@ def mc_volume_area_batch(vols, iso=0.5, spacings=None, *, backend=None,
         chunk=chunk,
         **dispatcher.kernel_kwargs(b),
     )
+
+
+def mc_tile_partials(slab, iso=0.5, spacing=(1.0, 1.0, 1.0), *, backend=None,
+                     k0=0, chunk_z=32, full_shape=None, block=None,
+                     chunk=None):
+    """Tile accumulator: MC partial sums for one halo-closed z-window.
+
+    The tiled pipeline's per-tile reduction entry (``core/tiled.py``).
+    ``slab`` spans the window's cells plus the closing plane
+    (``k * chunk_z + 1`` deep for ref, ``k * block[2] + 1`` for kernel
+    backends); ``k0`` is the window's first global slab/brick-row index.
+    Returns per-slab ``(dvol, darea)`` 1-D arrays on the ref backend and
+    per-brick ``(vol_p, area_p)`` (nbx, nby, nbz_window) arrays on the
+    kernel backends.  Partials are NOT reduced here: the caller re-folds
+    them in the in-core path's global order so the f32 accumulation is
+    bit-identical (see :func:`repro.kernels.ref.mc_slab_partials` and
+    :func:`repro.kernels.marching_cubes.mc_brick_partials_pallas`).
+    """
+    b = dispatcher.resolve_backend(backend)
+    if b == "ref":
+        return _ref.mc_slab_partials(slab, iso, spacing, chunk_z=chunk_z, k0=k0)
+    if full_shape is None:
+        raise ValueError("kernel backends need full_shape for the centred "
+                         "origin")
+    if block is None or block == "auto" or chunk is None:
+        block, chunk = dispatcher.mc_config(b, tuple(full_shape), block, chunk)
+    cz = int(block[2])
+    return _mc.mc_brick_partials_pallas(
+        slab, iso, spacing,
+        full_shape=tuple(full_shape),
+        z_cell_offset=np.float32(k0 * cz),
+        block=tuple(block), chunk=chunk,
+        **dispatcher.kernel_kwargs(b),
+    )
+
+
+def mc_tile_finalize(vol_partials, area_partials, *, backend=None):
+    """Fold assembled tile partials into ``(volume, area)``.
+
+    ref: a host ``np.float32`` left fold over the global-slab-order
+    deltas -- IEEE-754 single adds, the same op sequence as the in-core
+    scan carry.  Kernel backends: one jitted reduce over the assembled
+    full brick grid (:func:`mc_partials_finalize` -- the same reduction
+    shape the in-core kernel entry ends with).
+    """
+    b = dispatcher.resolve_backend(backend)
+    if b == "ref":
+        sv = np.float32(0.0)
+        sa = np.float32(0.0)
+        for dv, da in zip(np.asarray(vol_partials, np.float32),
+                          np.asarray(area_partials, np.float32)):
+            sv = np.float32(sv + dv)
+            sa = np.float32(sa + da)
+        return np.abs(sv), sa
+    v, a = _mc.mc_partials_finalize(jnp.asarray(vol_partials, jnp.float32),
+                                    jnp.asarray(area_partials, jnp.float32))
+    return np.float32(v), np.float32(a)
 
 
 def max_diameters(verts, mask, *, backend=None, **kw):
@@ -276,9 +339,16 @@ def glcm_features_batch(images, masks, *, backend=None, n_bins=32,
     )
 
 
-def vertex_fields(vol, iso=0.5, spacing=(1.0, 1.0, 1.0), origin=(0.0, 0.0, 0.0)):
+def vertex_fields(vol, iso=0.5, spacing=(1.0, 1.0, 1.0), origin=(0.0, 0.0, 0.0),
+                  index_offset=None):
     """Dense dedup vertex fields (elementwise; same path on all backends)."""
-    return _ref.vertex_fields(vol, iso, spacing, origin)
+    return _ref.vertex_fields(vol, iso, spacing, origin,
+                              index_offset=index_offset)
+
+
+def tile_vertex_fields(slab, iso, spacing, index_offset):
+    """Jitted per-tile vertex fields in the full volume's index frame."""
+    return _ref.tile_vertex_fields(slab, iso, spacing, index_offset)
 
 
 def count_vertices(fields):

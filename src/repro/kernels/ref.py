@@ -47,11 +47,22 @@ def _interp(v0, v1, iso):
     return jnp.clip(t, 0.0, 1.0)
 
 
-def vertex_fields(vol, iso=0.5, spacing=(1.0, 1.0, 1.0), origin=(0.0, 0.0, 0.0)):
-    """Compute the deduplicated mesh-vertex fields (pure elementwise pass)."""
+def vertex_fields(vol, iso=0.5, spacing=(1.0, 1.0, 1.0), origin=(0.0, 0.0, 0.0),
+                  index_offset=None):
+    """Compute the deduplicated mesh-vertex fields (pure elementwise pass).
+
+    ``index_offset`` (default: none -- the graph is unchanged) shifts the
+    per-axis grid indices before the physical mapping, so a sub-window of
+    a larger volume emits positions in the FULL volume's index frame.
+    The offsets are integers (< 2^24) added to integer-valued f32 iotas:
+    the add is exact, so ``(local + offset) + t`` is bit-identical to the
+    full volume's ``global + t`` -- the key to tiled/in-core vertex
+    bit-parity (``core/tiled.py``).
+    """
     vol = jnp.asarray(vol, jnp.float32)
     sp = jnp.asarray(spacing, jnp.float32)
     og = jnp.asarray(origin, jnp.float32)
+    off = None if index_offset is None else jnp.asarray(index_offset, jnp.float32)
     nx, ny, nz = vol.shape
     inside = vol > iso
 
@@ -71,6 +82,8 @@ def vertex_fields(vol, iso=0.5, spacing=(1.0, 1.0, 1.0), origin=(0.0, 0.0, 0.0))
             indexing="ij",
         )
         idx = [ii, jj, kk]
+        if off is not None:
+            idx = [ii + off[0], jj + off[1], kk + off[2]]
         idx[axis] = idx[axis] + t
         pos = jnp.stack(idx, axis=-1) * sp + og
         return pos, act
@@ -157,6 +170,62 @@ def _mc_volume_area_jit(vol, iso, spacing, origin, chunk_z):
 
     (sv, sa), _ = jax.lax.scan(body, (0.0, 0.0), jnp.arange(n_slabs))
     return jnp.abs(sv), sa
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_z",))
+def _mc_slab_partials_jit(vol, iso, spacing, origin, k0, chunk_z):
+    n_slabs = (vol.shape[2] - 1) // chunk_z
+
+    def body(carry, k):
+        sv, sa = carry
+        slab = jax.lax.dynamic_slice_in_dim(vol, k * chunk_z, chunk_z + 1, axis=2)
+        og = jnp.asarray(origin, jnp.float32).at[2].add(
+            (k + k0) * chunk_z * jnp.asarray(spacing, jnp.float32)[2]
+        )
+        dv, da = _slab_volume_area(slab, iso, spacing, og)
+        return (sv + dv, sa + da), (dv, da)
+
+    _, (dvs, das) = jax.lax.scan(body, (0.0, 0.0), jnp.arange(n_slabs))
+    return dvs, das
+
+
+def mc_slab_partials(vol, iso=0.5, spacing=(1.0, 1.0, 1.0),
+                     origin=(0.0, 0.0, 0.0), chunk_z=32, k0=0):
+    """Per-slab (signed volume, area) partial sums for one z-window.
+
+    The tiled-extraction building block: the scan body is the SAME
+    ``_slab_volume_area`` + origin-advance as :func:`_mc_volume_area_jit`
+    (slab shapes identical -- the caller pads the window to a whole
+    number of ``chunk_z`` granules plus the closing plane), but the
+    per-slab deltas are emitted instead of only the folded carry.  ``k0``
+    is the window's first GLOBAL slab index: ``(k + k0)`` is an exact
+    int add, so each slab's origin is bit-identical to the one the
+    in-core scan computes for that global slab.  The host re-folds the
+    collected deltas in global slab order with np.float32 adds (IEEE-754
+    single, the same op the in-core carry performs) -- see
+    ``core/tiled.py``.
+    """
+    vol = jnp.asarray(vol, jnp.float32)
+    if (vol.shape[2] - 1) % chunk_z:
+        raise ValueError(
+            f"window depth {vol.shape[2]} is not a whole number of "
+            f"chunk_z={chunk_z} slabs plus the closing plane"
+        )
+    return _mc_slab_partials_jit(
+        vol, jnp.float32(iso), jnp.asarray(spacing, jnp.float32),
+        jnp.asarray(origin, jnp.float32), jnp.int32(k0), chunk_z
+    )
+
+
+@jax.jit
+def tile_vertex_fields(slab, iso, spacing, index_offset):
+    """Jitted vertex-field pass for one halo-padded tile sub-window.
+
+    ``index_offset`` is traced (one compile per sub-window shape bucket,
+    not per tile position).  Positions land in the full volume's index
+    frame -- see :func:`vertex_fields` on why this is bit-exact.
+    """
+    return vertex_fields(slab, iso, spacing, index_offset=index_offset)
 
 
 def mc_volume_area(vol, iso=0.5, spacing=(1.0, 1.0, 1.0), origin=(0.0, 0.0, 0.0), chunk_z=32):

@@ -96,6 +96,34 @@ DEFAULT_MAX_QUEUE_MB = 256.0
 DEFAULT_LOADER_CASE_BYTES = 8 << 20
 
 
+def _peek_loader_shape(loader):
+    """(shape, spacing) from a loader callable's NIfTI path, if it has one.
+
+    Loaders that want byte-accurate admission control attach the mask
+    file they will read (``loader.path`` / ``nifti_path`` / ``mask_path``
+    -- a ``functools.partial`` keyword works too); the peek reads only
+    the 352-byte header.  Any failure (no path, unreadable, not NIfTI)
+    falls back to ``(None, None)`` -- the flat default charge -- because
+    admission control must never raise on a weird loader.
+    """
+    for attr in ("path", "nifti_path", "mask_path"):
+        path = getattr(loader, attr, None)
+        if path is None:
+            kw = getattr(loader, "keywords", None)  # functools.partial
+            path = kw.get(attr) if isinstance(kw, dict) else None
+        if path is None:
+            continue
+        try:
+            from repro.data.nifti import read_nifti_header
+
+            hdr = read_nifti_header(path)
+        except Exception:
+            continue
+        shape = tuple(int(s) for s in hdr.shape3)
+        return shape, np.asarray(hdr.spacing, np.float32)
+    return None, None
+
+
 def estimate_case_bytes(case, needs_intensity: bool = False,
                         shape_hint=None) -> int:
     """Admission-control byte estimate for one queued case.
@@ -104,13 +132,17 @@ def estimate_case_bytes(case, needs_intensity: bool = False,
     built from the UNCROPPED mask shape), so the queue budget is
     enforceable before any prep work runs.  Over-estimates -- the real
     pass 0 crops to the ROI first -- which is the right direction for
-    backpressure.  A loader callable with no ``shape_hint`` charges the
-    flat :data:`DEFAULT_LOADER_CASE_BYTES`.
+    backpressure.  A loader callable exposing a NIfTI ``path`` (or
+    ``nifti_path`` / ``mask_path``) attribute is sized by a 352-byte
+    header peek (``data.nifti.read_nifti_header``); only a loader with
+    no usable path charges the flat :data:`DEFAULT_LOADER_CASE_BYTES`.
     """
     shape = spacing = None
     if shape_hint is not None:
         shape = tuple(int(s) for s in shape_hint)
-    elif not callable(case):
+    elif callable(case):
+        shape, spacing = _peek_loader_shape(case)
+    else:
         try:
             _, mask, spacing = case
             shape = tuple(int(s) for s in np.shape(mask))

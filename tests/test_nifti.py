@@ -112,3 +112,68 @@ def test_feature_extraction_from_nifti(tmp_path):
     want = ShapeFeatureExtractor(backend="ref").execute(img, msk, sp)
     for k in ("MeshVolume", "SurfaceArea", "Maximum3DDiameter"):
         np.testing.assert_allclose(res[k], want[k], rtol=1e-6)
+
+
+# -- windowed slab reader (the out-of-core tiling IO path, PR 9) -------------
+
+
+def test_slab_reader_matches_full_read(tmp_path):
+    from repro.data.nifti import read_nifti_slab
+
+    rng = np.random.default_rng(11)
+    data = (rng.random((7, 6, 13)) * 100).astype(np.int16)
+    sp = (0.9, 1.1, 2.5)
+    p = tmp_path / "vol.nii"
+    write_nifti(p, data, sp, scl_slope=0.25, scl_inter=-5.0)
+    full, spacing = read_nifti(p)
+    for z0, z1 in ((0, 13), (0, 4), (5, 9), (12, 13), (6, 6)):
+        slab, sp_slab = read_nifti_slab(p, z0, z1)
+        assert slab.shape == (7, 6, z1 - z0)
+        np.testing.assert_array_equal(slab, full[:, :, z0:z1])
+        np.testing.assert_allclose(sp_slab, spacing, rtol=1e-6)
+    with pytest.raises(ValueError, match="out of range"):
+        read_nifti_slab(p, 0, 14)
+    with pytest.raises(ValueError, match="out of range"):
+        read_nifti_slab(p, -1, 4)
+
+
+def test_slab_reader_refuses_gz_with_workaround(tmp_path):
+    from repro.data.nifti import read_nifti_slab
+
+    p = tmp_path / "vol.nii.gz"
+    write_nifti(p, np.zeros((4, 4, 8), np.uint8))
+    with pytest.raises(ValueError, match=r"gunzip.*\.nii file"):
+        read_nifti_slab(p, 0, 2)
+    # gz content behind a .nii name is sniffed, not trusted by suffix
+    sneaky = tmp_path / "sneaky.nii"
+    sneaky.write_bytes(p.read_bytes())
+    with pytest.raises(ValueError, match="do not support seeking"):
+        read_nifti_slab(sneaky, 0, 2)
+
+
+def test_header_peek_matches_full_read(tmp_path):
+    from repro.data.nifti import read_nifti_header
+
+    data = (np.arange(4 * 3 * 5) % 7).astype(np.uint8).reshape(4, 3, 5)
+    for name in ("v.nii", "v.nii.gz"):
+        p = tmp_path / name
+        write_nifti(p, data, (1.5, 2.0, 0.5), scl_slope=3.0, scl_inter=1.0)
+        hdr = read_nifti_header(p)
+        assert hdr.shape3 == (4, 3, 5)
+        assert hdr.dtype == np.uint8
+        assert hdr.data_bytes == 60
+        assert hdr.gzipped == name.endswith(".gz")
+        assert (hdr.scl_slope, hdr.scl_inter) == (3.0, 1.0)
+        np.testing.assert_allclose(hdr.spacing, (1.5, 2.0, 0.5), rtol=1e-6)
+
+
+def test_slab_reader_truncated_data_errors(tmp_path):
+    from repro.data.nifti import read_nifti_slab
+
+    p = tmp_path / "trunc.nii"
+    write_nifti(p, np.ones((4, 4, 6), np.int16))
+    raw = p.read_bytes()
+    p.write_bytes(raw[: len(raw) - 40])  # chop the tail planes
+    read_nifti_slab(p, 0, 3)  # early planes still intact
+    with pytest.raises(ValueError, match="truncated NIfTI data"):
+        read_nifti_slab(p, 4, 6)

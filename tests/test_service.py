@@ -297,3 +297,37 @@ def test_service_driver_survives_and_reports_on_close():
     svc.close()  # idempotent
     with pytest.raises(ServiceClosed):
         svc.submit_case(_cases(1)[0])
+
+
+def test_estimate_case_bytes_peeks_loader_nifti_header(tmp_path):
+    """PR 9: a loader exposing its NIfTI path is sized by a header peek,
+    not the flat default -- admission control sees real volume bytes."""
+    import functools
+
+    from repro.data.nifti import write_nifti
+
+    img, msk, sp = _cases(1)[0]
+    p = tmp_path / "mask.nii"
+    write_nifti(p, np.asarray(msk, np.uint8), sp)
+
+    def loader():
+        from repro.data.nifti import read_nifti
+
+        mask, spacing = read_nifti(loader.path)
+        return img, mask.astype(np.float32), spacing
+
+    loader.path = p
+    want = estimate_case_bytes((img, msk, sp))
+    assert estimate_case_bytes(loader) == want
+    assert estimate_case_bytes(loader, needs_intensity=True) > want
+
+    # a functools.partial keyword path works the same way
+    part = functools.partial(lambda nifti_path: None, nifti_path=p)
+    assert estimate_case_bytes(part) == want
+
+    # unreadable / missing paths fall back to the flat default, never raise
+    from repro.serve.service import DEFAULT_LOADER_CASE_BYTES
+
+    broken = lambda: None  # noqa: E731
+    broken.path = tmp_path / "nope.nii"
+    assert estimate_case_bytes(broken) == DEFAULT_LOADER_CASE_BYTES
