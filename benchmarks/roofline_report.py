@@ -1,64 +1,202 @@
-"""Aggregate experiments/dryrun/*.json into the §Roofline table.
+"""Per-kernel roofline-efficiency rows for the gated pipeline trajectory.
 
-One row per (arch, shape, mesh) dry-run cell: the three roofline terms,
-the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs usefulness ratio, and the
-roofline fraction.  This is the report the perf loop iterates on.
+For every launch kind the executor dispatches (pair-sweep diameter, prune
+bound, segmented compaction, fused marching cubes, first-order, GLCM) at
+a small canonical bucket grid, this suite:
+
+1. measures the real batched 'ref' launch (``benchmarks.common.timeit``
+   median, depth :data:`DEPTH`);
+2. prices the same launch with the structural work model
+   (``repro.runtime.roofline``) under a hardware profile MEASURED fresh
+   in-process (``repro.runtime.autotune.measure_hw_profile`` -- same
+   host, same minute as the kernel timing, so the ratio below is a
+   same-machine quantity);
+3. reports the achieved fraction of the roofline bound,
+   ``bound_us / measured_us``.
+
+The fraction rides the ``cases_per_second`` field of each
+``roofline/<kernel>/<bucket>`` row -- the same higher-is-better encoding
+the serve-latency rows use for 1/latency -- so the committed
+``BENCH_pipeline.json`` trajectory gates it under the existing >30%
+regression rule: a kernel silently dropping from 40% to 15% of its
+roofline bound fails the build even when absolute-throughput noise would
+hide it.  Because both the bound (via the fresh probe) and the
+measurement come from the same host, the fraction is far more portable
+across machines than the raw throughput rows it sits beside.
 """
 from __future__ import annotations
 
-import argparse
-import json
-from pathlib import Path
+import time
+
+import jax
+import jax.numpy as jnp
 
 from benchmarks.common import row
 
-DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+DEPTH = 4  # batch depth of every measured launch (= runtime.roofline.CAL_DEPTH)
+
+# best-of-N timing: the gated fraction is a capability ratio, and transient
+# host load only ever LOWERS an individual sample, so the minimum is the
+# stable estimator (the same reason the sync probe is best-of-64) -- a
+# median here swings the fraction well past the 30% gate on a busy runner
+TIMING_REPEAT = 5
+
+# the probe and the kernel timings are re-taken in ROUNDS interleaved
+# rounds and each row keeps its best fraction: load during the probe
+# lowers the bound, load during the kernel raises the measurement, so ALL
+# noise pushes the fraction down -- the max over rounds is a tight,
+# one-sided estimator of the true capability ratio
+ROUNDS = 3
 
 
-def load_cells(mesh: str | None = None):
-    cells = []
-    for p in sorted(DRYRUN_DIR.glob("*.json")):
-        d = json.loads(p.read_text())
-        if mesh and d.get("mesh") not in (mesh, None):
-            continue
-        cells.append(d)
-    return cells
+def _best_time(fn, *args, repeat: int = TIMING_REPEAT, warmup: int = 2):
+    """Best-of-``repeat`` wall-clock seconds with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+#: The measured (kind, bucket) grid -- one row per entry.  Kept small:
+#: this runs inside the CI bench stage on the CPU 'ref' backend.
+GRID = (
+    {"kind": "diameter", "m": 1024},
+    {"kind": "diameter", "m": 2048},
+    {"kind": "prune", "m": 2048},
+    {"kind": "compact", "m": 2048, "cap": 1024},
+    {"kind": "mc", "shape": (34, 34, 34)},
+    {"kind": "firstorder", "shape": (34, 34, 34)},
+    {"kind": "glcm", "shape": (34, 34, 34)},
+)
 
 
-def run(mesh: str | None = None):
+def _bucket_label(spec: dict) -> str:
+    if "m" in spec:
+        label = f"M{spec['m']}"
+        if "cap" in spec:
+            label += f"c{spec['cap']}"
+        return label
+    return "S" + "x".join(str(s) for s in spec["shape"])
+
+
+def _launch(spec: dict):
+    """(fn, args) for the batched 'ref' launch of one grid entry."""
+    kind = spec["kind"]
+    if kind == "diameter":
+        from repro.kernels import ref as _ref
+
+        args = (jnp.zeros((DEPTH, spec["m"], 3), jnp.float32),
+                jnp.ones((DEPTH, spec["m"]), bool))
+
+        def fn(v, msk):
+            return jax.lax.map(
+                lambda a: _ref.max_diameters_sq(a[0], a[1]), (v, msk)
+            )
+    elif kind == "prune":
+        from repro.kernels import prune as _prune
+
+        args = (jnp.zeros((DEPTH, spec["m"], 3), jnp.float32),
+                jnp.ones((DEPTH, spec["m"]), bool))
+
+        def fn(v, msk):
+            return _prune.keep_mask_batch(v, msk, 16)
+    elif kind == "compact":
+        from repro.kernels import compact as _compact
+
+        cap = spec["cap"]
+        args = (jnp.zeros((DEPTH, spec["m"], 3), jnp.float32),
+                jnp.ones((DEPTH, spec["m"]), bool))
+
+        def fn(v, keep):
+            return _compact.compact_batch_ref(v, keep, cap)
+    elif kind == "mc":
+        from repro.kernels import ops as _ops
+
+        args = (jnp.zeros((DEPTH,) + spec["shape"], jnp.float32),
+                jnp.ones((DEPTH, 3), jnp.float32))
+
+        def fn(vols, sps):
+            return _ops.mc_volume_area_batch(vols, 0.5, sps, backend="ref")
+    else:
+        from repro.kernels import firstorder as _fo
+        from repro.kernels import glcm as _glcm
+
+        op = (_fo.firstorder_packed_batch_ref if kind == "firstorder"
+              else _glcm.glcm_matrix_batch_ref)
+        args = (jnp.zeros((DEPTH,) + spec["shape"], jnp.float32),
+                jnp.ones((DEPTH,) + spec["shape"], bool))
+
+        def fn(images, masks):
+            return op(images, masks, 32)
+    return jax.jit(fn), args
+
+
+def run(records: list | None = None):
+    """Measure the grid; returns printable rows, appends record dicts."""
+    from repro.runtime import autotune, roofline
+
+    costs = {}
+    launches = {}
+    for spec in GRID:
+        name = f"roofline/{spec['kind']}/{_bucket_label(spec)}"
+        costs[name] = roofline.model_kernel_cost(
+            spec["kind"], depth=DEPTH, m=spec.get("m"), cap=spec.get("cap"),
+            shape=spec.get("shape"),
+        )
+        launches[name] = _launch(spec)
+
+    best: dict = {}
+    for _ in range(ROUNDS):
+        profile = autotune.measure_hw_profile()
+        for name, (flops, nbytes) in costs.items():
+            bound_us = roofline.roofline_us(flops, nbytes, profile)
+            fn, args = launches[name]
+            measured_us = _best_time(fn, *args) * 1e6
+            frac = bound_us / measured_us if measured_us > 0 else 0.0
+            if name not in best or frac > best[name]["frac"]:
+                best[name] = {
+                    "frac": frac, "measured_us": measured_us,
+                    "bound_us": bound_us, "profile": profile,
+                }
+
     rows = []
-    for d in load_cells(mesh):
-        name = f"roofline/{d['arch']}/{d['shape']}/{d.get('mesh', '?')}"
-        if d.get("skipped"):
-            rows.append(row(name, 0.0, status="skipped"))
-            continue
-        if d.get("status") != "ok":
-            rows.append(row(name, 0.0, status="FAILED"))
-            continue
-        r = d["roofline"]
-        m = d.get("memory", {})
-        bound_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    for name, (flops, nbytes) in costs.items():
+        b = best[name]
         rows.append(
             row(
                 name,
-                bound_s * 1e6,  # bound step time (us) = the 'call'
-                dominant=r["dominant"].replace("_s", ""),
-                compute_s=f"{r['compute_s']:.3e}",
-                memory_s=f"{r['memory_s']:.3e}",
-                collective_s=f"{r['collective_s']:.3e}",
-                roofline_frac=f"{r.get('roofline_fraction', 0):.3f}",
-                useful_flops=f"{r.get('useful_flops_ratio', 0):.3f}",
-                hbm_gib=f"{(m.get('argument_size_in_bytes', 0) + m.get('temp_size_in_bytes', 0)) / 2**30:.2f}",
+                b["measured_us"],
+                roofline_frac=f"{b['frac']:.4f}",
+                bound_us=f"{b['bound_us']:.1f}",
+                gflops=f"{flops / 1e9:.3f}",
+                mbytes=f"{nbytes / 2**20:.1f}",
             )
         )
+        if records is not None:
+            records.append(
+                {
+                    "name": name,
+                    "cases": DEPTH,
+                    "seconds": b["measured_us"] / 1e6,
+                    # the gated metric: achieved fraction of the roofline
+                    # bound (higher is better, same-host ratio)
+                    "cases_per_second": b["frac"],
+                    "measured_us": b["measured_us"],
+                    "bound_us": b["bound_us"],
+                    "model_flops": flops,
+                    "model_bytes": nbytes,
+                    "peak_flops": b["profile"]["peak_flops"],
+                    "mem_bw": b["profile"]["mem_bw"],
+                }
+            )
     return rows
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--mesh", default=None)
-    args = ap.parse_args(argv)
-    for r in run(args.mesh):
+    for r in run():
         print(r)
 
 

@@ -8,7 +8,7 @@ One benchmark per paper table/figure (+ the roofline report):
     pipeline -- batched multi-case throughput       (paper §3 workflow)
     soak     -- faulted/preempted/resumed soak      (resilience gate)
     serve    -- service mixed-traffic p50/p99       (serving-tier gate)
-    roofline -- dry-run roofline table              (EXPERIMENTS §Roofline)
+    roofline -- per-kernel roofline efficiency      (CI efficiency gate)
 
 Prints ``name,us_per_call,derived`` CSV.  Select suites with --only.
 ``--json PATH`` additionally writes a ``BENCH_diameter.json`` trajectory
@@ -112,8 +112,13 @@ def main(argv=None):
                 from benchmarks import serve_latency
                 rows = serve_latency.run(records=pipeline_records)
             else:
+                # per-kernel roofline-efficiency rows ride the pipeline
+                # record too: each row's cases_per_second carries the
+                # achieved fraction of the kernel's roofline bound (a
+                # same-host ratio), so the committed trajectory gates
+                # silent efficiency regressions under the same >30% rule
                 from benchmarks import roofline_report
-                rows = roofline_report.run()
+                rows = roofline_report.run(records=pipeline_records)
         except Exception as e:  # pragma: no cover
             print(f"{suite}/ERROR,0,{type(e).__name__}: {e}", file=sys.stderr)
             failures += 1

@@ -12,13 +12,22 @@ row name present in both records.
 Noise policy: both benches already record best-of-N interleaved
 measurements (see benchmarks/pipeline_throughput.py), so a 30% drop is a
 real regression, not scheduler jitter.  Rows new to the fresh record
-pass (there is nothing to compare), rows that disappeared are reported
-as a warning (a silently dropped bench mode should be loud), and a
-missing baseline (first commit, renamed file, no git) skips the gate
-with a notice rather than failing -- the gate guards trajectories, it
-does not invent them.  Any OTHER baseline-lookup failure (an unreadable
-object, a corrupt committed record) FAILS the gate: a gate that skips on
-unexpected errors is a gate that silently stops gating.
+pass (there is nothing to compare), rows that VANISHED from the fresh
+record FAIL unless explicitly named in ``--allow-vanished`` (a
+deleted-but-still-gated bench mode must be acknowledged, never dropped
+silently), and a missing baseline (first commit, renamed file, no git)
+skips the gate with a notice rather than failing -- the gate guards
+trajectories, it does not invent them.  Any OTHER baseline-lookup
+failure (an unreadable object, a corrupt committed record) FAILS the
+gate: a gate that skips on unexpected errors is a gate that silently
+stops gating.
+
+``--stages ci_stage_times.json`` additionally compares the per-stage
+wall times ``scripts/ci_smoke.sh`` emits against the committed record
+and WARNS (never fails: CI minutes are shared, noisy machines) when any
+stage grew past ``--stage-factor`` (default 2x) -- CI wall time is a
+perf surface too, and a quietly doubled stage is how a 10-minute gate
+becomes an hour.
 
 The baseline path is resolved REPO-RELATIVE before ``git show`` (via
 ``git rev-parse --show-toplevel``), so the gate works from any working
@@ -43,6 +52,10 @@ METRICS = {
     "pipeline": ("cases_per_second", True),
     "diameter": ("us_per_call", False),
 }
+
+# --stages: baselines shorter than this are pure quantisation noise
+# (integer seconds), so the >factor growth warning skips them
+STAGE_MIN_SECS = 5.0
 
 # git-show stderr fragments that mean "this baseline legitimately does
 # not exist" (first commit, renamed/never-committed file, bad ref on a
@@ -122,7 +135,8 @@ def load_baseline(path: str, ref: str):
 
 
 def check_record(label: str, fresh: dict, baseline: dict,
-                 threshold: float) -> list[str]:
+                 threshold: float,
+                 allow_vanished: tuple = ()) -> list[str]:
     """Compare one bench record pair; returns failure messages."""
     metric, higher = METRICS[label]
     base_rows = {
@@ -157,10 +171,50 @@ def check_record(label: str, fresh: dict, baseline: dict,
                 f"(base {b:.4g} -> fresh {f:.4g}, threshold "
                 f"{threshold:.0%})"
             )
-    for name in base_rows.keys() - fresh_names:
-        print(f"  WARNING {label}/{name}: baseline row missing from the "
-              "fresh record (bench mode dropped?)")
+    for name in sorted(base_rows.keys() - fresh_names):
+        if name in allow_vanished:
+            print(f"  {label}/{name}: baseline row vanished "
+                  "(allowed by --allow-vanished)")
+            continue
+        print(f"  {label}/{name}: baseline row MISSING from the fresh "
+              "record (bench mode dropped?)")
+        failures.append(
+            f"{label}/{name}: committed baseline row vanished from the "
+            "fresh record; a dropped bench mode must be named in "
+            "--allow-vanished"
+        )
     return failures
+
+
+def check_stages(path: str, baseline: dict, factor: float) -> None:
+    """Warn (never fail) on ci_smoke stages whose wall time grew > factor.
+
+    Stage seconds are integer wall-clock on shared CI machines, so this
+    is advisory: sub-``--stage-min`` baselines are skipped entirely (a
+    1s stage 'doubling' to 2s is quantisation, not growth).
+    """
+    with open(path) as f:
+        fresh = json.load(f)
+    base_stages = baseline.get("stages", {})
+    for name, secs in fresh.get("stages", {}).items():
+        base = base_stages.get(name)
+        if base is None:
+            print(f"  stages/{name}: NEW (no baseline stage)")
+            continue
+        try:
+            b, s = float(base), float(secs)
+        except (TypeError, ValueError):
+            print(f"  stages/{name}: unreadable wall time, skipped")
+            continue
+        if b < STAGE_MIN_SECS:
+            print(f"  stages/{name}: base={b:.0f}s fresh={s:.0f}s "
+                  "(below the noise floor, not compared)")
+            continue
+        verdict = "OK" if s <= b * factor else f"WARNING grew >{factor:g}x"
+        print(f"  stages/{name}: base={b:.0f}s fresh={s:.0f}s {verdict}")
+    for name in sorted(base_stages.keys() - fresh.get("stages", {}).keys()):
+        print(f"  WARNING stages/{name}: stage missing from the fresh "
+              "record (renamed? dropped?)")
 
 
 def main(argv=None) -> int:
@@ -174,9 +228,21 @@ def main(argv=None) -> int:
                     help="max tolerated fractional slowdown (default 0.30)")
     ap.add_argument("--ref", default="HEAD",
                     help="git ref holding the committed baseline")
+    ap.add_argument("--allow-vanished", nargs="*", metavar="ROW",
+                    default=[],
+                    help="row names allowed to vanish from the fresh "
+                         "record (vanished rows FAIL otherwise)")
+    ap.add_argument("--stages", default=None, metavar="PATH",
+                    help="fresh ci_stage_times.json: warn when any stage "
+                         "wall time grew >--stage-factor vs the committed "
+                         "record")
+    ap.add_argument("--stage-factor", type=float, default=2.0,
+                    help="max tolerated stage wall-time growth factor "
+                         "(default 2.0; warns, never fails)")
     args = ap.parse_args(argv)
-    if args.pipeline is None and args.diameter is None:
-        ap.error("nothing to check: pass --pipeline and/or --diameter")
+    if args.pipeline is None and args.diameter is None and args.stages is None:
+        ap.error("nothing to check: pass --pipeline, --diameter and/or "
+                 "--stages")
 
     failures: list[str] = []
     for label, path in (("pipeline", args.pipeline),
@@ -198,7 +264,23 @@ def main(argv=None) -> int:
             print(f"{label}: {skip}; skipping (nothing to regress against)")
             continue
         print(f"{label}: fresh {path} vs {args.ref}:{path}")
-        failures += check_record(label, fresh, baseline, args.threshold)
+        failures += check_record(label, fresh, baseline, args.threshold,
+                                 tuple(args.allow_vanished))
+
+    if args.stages is not None:
+        baseline, skip, error = load_baseline(args.stages, args.ref)
+        if error is not None:
+            print(f"stages: {error}")
+            failures.append(f"stages: {error}")
+        elif baseline is None:
+            print(f"stages: {skip}; skipping (nothing to compare against)")
+        else:
+            print(f"stages: fresh {args.stages} vs {args.ref}:{args.stages}")
+            try:
+                check_stages(args.stages, baseline, args.stage_factor)
+            except (OSError, ValueError) as e:
+                print(f"stages: fresh record {args.stages} unreadable ({e})")
+                failures.append("stages: fresh record unreadable")
 
     if failures:
         print("\nbench gate FAILED:")

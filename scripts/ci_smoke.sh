@@ -3,7 +3,9 @@
 # named parity/schedule gates, the interpret-mode benchmark passes that
 # re-emit the BENCH_*.json perf trajectories, and the bench-regression
 # gate that compares them against the committed baseline -- with per-stage
-# wall-time reporting so CI logs show where the minutes go.
+# wall-time reporting so CI logs show where the minutes go (also written
+# machine-readably to ci_stage_times.json and gated, warn-only, against
+# the committed record by scripts/check_bench.py --stages).
 #
 # Usage: scripts/ci_smoke.sh
 #   SMOKE_TIER1_ONLY=1  run only @tier1-marked tests (quick local gate)
@@ -23,6 +25,23 @@ stage() {  # stage <name> <cmd...>: run one named stage, record wall time
   STAGE_NAMES+=("$name")
   STAGE_SECS+=("$dt")
   echo "== ci_smoke stage ${name}: ${dt}s"
+}
+
+# machine-readable per-stage wall times, written next to the BENCH_*.json
+# trajectories (uploaded as a CI artifact; `scripts/check_bench.py
+# --stages` warns when any stage grows >2x vs the committed record)
+emit_stage_times() {
+  local out="ci_stage_times.json" i
+  local last=$(( ${#STAGE_NAMES[@]} - 1 ))
+  {
+    printf '{\n "written_at": "%s",\n "stages": {\n' \
+      "$(date +%Y-%m-%dT%H:%M:%S)"
+    for i in "${!STAGE_NAMES[@]}"; do
+      printf '  "%s": %s%s\n' "${STAGE_NAMES[$i]}" "${STAGE_SECS[$i]}" \
+        "$([[ $i -lt $last ]] && echo ',')"
+    done
+    printf ' }\n}\n'
+  } > "$out"
 }
 
 # 1) tier-1 gate (ROADMAP "Tier-1 verify"), fail-fast
@@ -80,25 +99,41 @@ stage tiled python -m pytest -q -m tier1 \
     tests/test_tiled_pipeline.py
 stage tiled_smoke python -m repro.launch.tiled_smoke --backend ref
 
+# 8) roofline gates: the HLO/jaxpr cost parsers plus the agreement
+#    contract -- the plan-derived FLOP/byte census must match XLA's
+#    cost_analysis() within 10% on the ref backend, so the cost model's
+#    roofline fallback prices real launches, not a drifted paper model
+stage roofline python -m pytest -q -m tier1 tests/test_roofline.py
+
 if [[ "${SMOKE_SKIP_BENCH:-0}" != "1" ]]; then
-  # 6) kernel-wiring smoke: Fig.1 variant sweep (interpret mode) + the
+  # 9) kernel-wiring smoke: Fig.1 variant sweep (interpret mode) + the
   #    BENCH_diameter.json perf-trajectory record
   stage bench_diameter python -m benchmarks.run --only fig1 --json BENCH_diameter.json
   test -s BENCH_diameter.json
 
-  # 7) batched-throughput smoke: the pipeline mode ladder (single loop ->
+  # 10) batched-throughput smoke: the pipeline mode ladder (single loop ->
   #    streaming auto), the ~200-case faulted/preempted/resumed soak
-  #    (SOAK_CASES), and the serving-tier mixed-traffic p50/p99 rows, all
-  #    recorded as the BENCH_pipeline.json trajectory, then gated against
-  #    the committed trajectory (>30% cases/s or us/call regression on
-  #    any named row fails; the latency rows encode 1/latency as
-  #    cases_per_second so the same rule gates latency)
+  #    (SOAK_CASES), the serving-tier mixed-traffic p50/p99 rows, and the
+  #    per-kernel roofline achieved-fraction rows, all recorded as the
+  #    BENCH_pipeline.json trajectory, then gated against the committed
+  #    trajectory (>30% cases/s or us/call regression on any named row
+  #    fails; the latency rows encode 1/latency and the roofline rows
+  #    their achieved fraction as cases_per_second, so the same rule
+  #    gates latency and kernel efficiency)
   stage bench_pipeline env SOAK_CASES="${SOAK_CASES:-200}" \
-      python -m benchmarks.run --only pipeline soak serve --json-pipeline BENCH_pipeline.json
+      python -m benchmarks.run --only pipeline soak serve roofline --json-pipeline BENCH_pipeline.json
   test -s BENCH_pipeline.json
+  # stage wall times so far (everything above the gate), so the gate can
+  # also flag CI-minute regressions vs the committed record
+  emit_stage_times
   stage bench_gate python scripts/check_bench.py \
-      --pipeline BENCH_pipeline.json --diameter BENCH_diameter.json
+      --pipeline BENCH_pipeline.json --diameter BENCH_diameter.json \
+      --stages ci_stage_times.json
 fi
+
+# re-emit with the gate stage included (and so tier1-only / skip-bench
+# runs still produce the artifact)
+emit_stage_times
 
 summary="ci_smoke: OK"
 for i in "${!STAGE_NAMES[@]}"; do

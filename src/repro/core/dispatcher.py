@@ -146,6 +146,24 @@ def sync_cost(backend: str, cache=None) -> float:
     return autotune.get_sync_cost(backend, cache=cache)
 
 
+def hw_profile(backend: str, cache=None) -> dict | None:
+    """Resolve the backend's hardware roofline profile (or ``None``).
+
+    Consults the ``hw/<backend>`` autotune-cache entry (the one-time
+    measured peak-FLOP/s + memory-bandwidth probe;
+    ``repro.runtime.autotune.get_hw_profile``), falling back to the
+    static per-backend default when no calibration exists and probing is
+    disallowed.  ``None`` means no profile exists at all -- an unknown
+    backend string, or ``REPRO_ROOFLINE=0`` -- and the cost model then
+    uses its analytic constant.  Like :func:`sync_cost` this is
+    meaningful for every backend, and may run the measuring probe, so
+    call it OUTSIDE any traced function.
+    """
+    from repro.runtime import autotune  # local import: avoid cycle
+
+    return autotune.get_hw_profile(backend, cache=cache)
+
+
 def mc_config(backend: str, shape, block="auto", chunk: int | None = None,
               batch: int = 1):
     """Resolve the (brick, chunk) the marching-cubes kernel should run with.

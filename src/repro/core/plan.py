@@ -293,6 +293,34 @@ class CaseMeta:
 
 
 @dataclasses.dataclass(frozen=True)
+class WorkItem:
+    """One planned kernel launch, described structurally (no device data).
+
+    The plan layer's side of the roofline contract: a plan can enumerate
+    every launch it implies -- kind, batch depth, vertex bucket / target,
+    padded shape -- without importing a kernel module.  Pricing the items
+    (FLOPs, bytes, microseconds) is ``repro.runtime.roofline``'s job; the
+    split keeps this module importable in metadata-only contexts exactly
+    like the rest of the plan layer.
+
+    ``m`` is the launch's vertex bucket (pass-1 input cap for prune and
+    compaction, the sweep bucket for the diameter item); ``cap`` the
+    compaction OUTPUT bucket (compaction items only); ``shape`` the
+    padded volume bucket (MC and intensity-family items only).
+    """
+
+    kind: str
+    depth: int
+    m: int | None = None
+    cap: int | None = None
+    shape: tuple | None = None
+
+
+#: WorkItem kinds, one per launch family the executor dispatches.
+WORK_KINDS = ("prune", "compact", "diameter", "mc", "firstorder", "glcm")
+
+
+@dataclasses.dataclass(frozen=True)
 class ExtractionPlan:
     """Fully static execution plan for one window of cases.
 
@@ -325,6 +353,38 @@ class ExtractionPlan:
             [None if m.empty else Bucket(m.shape, m.vertex_cap)
              for m in self.metas]
         )
+
+    def work_census(self) -> tuple:
+        """Every kernel launch this plan implies, as :class:`WorkItem` rows.
+
+        Pass 2a contributes one MC item per shape group (plus one item
+        per requested intensity family, which shares the shape buckets);
+        pass 1 contributes a prune + compaction item per cap group; pass
+        2b one diameter item per cap group.  Under the static schedule
+        the diameter item sweeps at the plan's aligned target; under the
+        counted schedule the survivor buckets are not known until the
+        count fetch, so the census prices the conservative pre-compaction
+        cap -- an upper bound, which is the useful direction for both the
+        window-cost and deadline decisions.
+        """
+        items = []
+        for shape, idxs in self.shape_groups.items():
+            if shape is None:
+                continue
+            depth = len(idxs)
+            items.append(WorkItem(kind="mc", depth=depth, shape=shape))
+            for fam in self.families:
+                if FAMILIES[fam].needs_intensity:
+                    items.append(WorkItem(kind=fam, depth=depth, shape=shape))
+        for cap, idxs in self.cap_groups.items():
+            depth = len(idxs)
+            target = self.static_targets.get(cap) or cap
+            items.append(WorkItem(kind="prune", depth=depth, m=cap))
+            items.append(WorkItem(kind="compact", depth=depth, m=cap,
+                                  cap=target))
+            sweep = target if self.schedule == "static" else cap
+            items.append(WorkItem(kind="diameter", depth=depth, m=sweep))
+        return tuple(items)
 
     def stats(self) -> dict:
         """Plan-level stats: bucket counts + pad-waste fractions.

@@ -19,11 +19,15 @@ with entries keyed ``"diameter/<backend>/M<bucket>/B<depth>"``,
 scatter block), ``"firstorder/<backend>/S<nx>x<ny>x<nz>/B<depth>"`` /
 ``"glcm/<backend>/S<nx>x<ny>x<nz>/B<depth>"`` (the intensity-family
 reduction/pair-scatter blocks, one namespace per registered feature
-family -- see ``repro.core.plan.FamilySpec``), and ``"sync/<backend>"``
+family -- see ``repro.core.plan.FamilySpec``), ``"sync/<backend>"``
 (the measured device->host
 fetch latency -- the quantity the counted-vs-static schedule decision
 of ``runtime/costmodel`` turns on; probed once per backend, not per
-bucket, since a (B, 2) count fetch is latency- not bandwidth-bound).  ``B<depth>`` is the power-of-two *batch-depth bucket*
+bucket, since a (B, 2) count fetch is latency- not bandwidth-bound),
+and ``"hw/<backend>"`` (the measured hardware roofline profile -- peak
+FLOP/s + memory bandwidth -- that prices unmeasured buckets via
+``runtime/roofline``; probed once per host per backend, same policy as
+the sync probe).  ``B<depth>`` is the power-of-two *batch-depth bucket*
 (:func:`batch_bucket`): under ``lax.map`` / the batched pipeline the best
 (variant, block) / (brick, chunk) can shift with how many cases a launch
 carries, so the winning configuration is cached per (bucket, depth) pair
@@ -940,3 +944,111 @@ def get_sync_cost(
         {"us": t * 1e6, "probed_at": time.strftime("%Y-%m-%dT%H:%M:%S")},
     )
     return t * 1e6
+
+
+# ---------------------------------------------------------------------------
+# hardware roofline profile (peak FLOP/s + memory bandwidth) probe
+# ---------------------------------------------------------------------------
+
+# Static per-backend fallback profiles, used when no ``hw/<backend>`` entry
+# exists and probing is disallowed.  The cost model only consumes RATIOS of
+# these numbers (compute-vs-memory bound, bucket-vs-bucket cost), so modest
+# order-of-magnitude figures suffice:
+#   pallas          -- v5e VPU f32 throughput + HBM bandwidth (the
+#                      extraction kernels are elementwise/VPU work, not
+#                      MXU matmuls; see benchmarks/common.V5E)
+#   ref / interpret -- a single CPU core driving numpy-like jnp ops
+# Unknown backend strings have NO default profile: ``get_hw_profile``
+# returns None and the cost model falls back to its analytic constant.
+DEFAULT_HW_PROFILES = {
+    "pallas": {"peak_flops": 7.0e12, "mem_bw": 819.0e9, "source": "default"},
+    "ref": {"peak_flops": 8.0e9, "mem_bw": 20.0e9, "source": "default"},
+    "interpret": {"peak_flops": 8.0e9, "mem_bw": 20.0e9, "source": "default"},
+}
+
+HW_PROBE_MATMUL_N = 512   # f32 matmul edge for the peak-FLOP/s probe
+HW_PROBE_COPY_ELEMS = 1 << 22  # 16 MiB f32 stream for the bandwidth probe
+
+
+def hw_key(backend: str) -> str:
+    return f"hw/{backend}"
+
+
+def measure_hw_profile(*, repeat: int = 8, warmup: int = 2) -> dict:
+    """Measured ``{"peak_flops", "mem_bw"}`` for the local device.
+
+    Two tiny best-of-``repeat`` probes: an (N, N) f32 matmul for peak
+    FLOP/s (2*N^3 flops) and an add-scaled copy over a 16 MiB f32 stream
+    for memory bandwidth (read a + read b + write out = 3 arrays).  Both
+    are deliberately small -- the probe runs once per host per backend,
+    cached under ``hw/<backend>``, and must never dominate a run the way
+    a kernel sweep can.
+    """
+    n = HW_PROBE_MATMUL_N
+    a = jax.block_until_ready(
+        jax.numpy.ones((n, n), jax.numpy.float32) * 0.5
+    )
+    mm = jax.jit(lambda x: x @ x)
+    for _ in range(warmup):
+        jax.block_until_ready(mm(a))
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(mm(a))
+        best = min(best, time.perf_counter() - t0)
+    peak_flops = 2.0 * n ** 3 / best
+
+    m = HW_PROBE_COPY_ELEMS
+    x = jax.block_until_ready(jax.numpy.ones((m,), jax.numpy.float32))
+    y = jax.block_until_ready(jax.numpy.full((m,), 2.0, jax.numpy.float32))
+    axpy = jax.jit(lambda u, v: u + 0.5 * v)
+    for _ in range(warmup):
+        jax.block_until_ready(axpy(x, y))
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(axpy(x, y))
+        best = min(best, time.perf_counter() - t0)
+    mem_bw = 3.0 * 4.0 * m / best
+    return {"peak_flops": peak_flops, "mem_bw": mem_bw}
+
+
+def get_hw_profile(
+    backend: str,
+    *,
+    cache: AutotuneCache | None = None,
+    repeat: int = 8,
+) -> dict | None:
+    """Cached-or-probed hardware roofline profile for ``backend``.
+
+    Contract mirrors :func:`get_sync_cost`: a valid ``hw/<backend>``
+    cache entry wins without running anything; a miss probes when allowed
+    (same policy as the sync probe -- pallas by default,
+    ``REPRO_AUTOTUNE=1`` forces, ``=0`` disables) and persists the
+    measurement; a disallowed probe returns the static
+    :data:`DEFAULT_HW_PROFILES` entry uncached.  Returns ``None`` -- "no
+    profile exists" -- under ``REPRO_ROOFLINE=0`` (the escape hatch back
+    to the cost model's analytic constant) and for backend strings with
+    no default profile when probing is disallowed.
+    """
+    if os.environ.get("REPRO_ROOFLINE") == "0":
+        return None
+    cache = cache or AutotuneCache()
+    hit = cache.get(hw_key(backend))
+    if hit is not None:
+        try:
+            peak = float(hit["peak_flops"])
+            bw = float(hit["mem_bw"])
+        except (KeyError, TypeError, ValueError):
+            peak = bw = 0.0
+        if peak > 0 and bw > 0:
+            return {"peak_flops": peak, "mem_bw": bw,
+                    "source": "measured"}
+    if not _sync_probe_allowed(backend):
+        return DEFAULT_HW_PROFILES.get(backend)
+    prof = measure_hw_profile(repeat=repeat)
+    cache.put(
+        hw_key(backend),
+        {**prof, "probed_at": time.strftime("%Y-%m-%dT%H:%M:%S")},
+    )
+    return {**prof, "source": "measured"}

@@ -59,11 +59,31 @@ Decisions served (wired through ``core/executor``):
     absorbing cases.  No deadline pending means no latency pressure and
     the throughput rules above decide alone.
 
+Roofline fallback (the estimate hierarchy): an unmeasured bucket's price
+comes from the FIRST source in this ladder that can answer --
+
+1. **measured**: a ``diameter/<backend>/M<bucket>/B<depth>`` autotune
+   entry (the nearest shallower measured depth is consulted next) --
+   real wall time always wins;
+2. **roofline**: ``max(flops/peak_flops, bytes/mem_bw)`` from the
+   structural work model (``runtime/roofline.diameter_cost``) under the
+   backend's hardware profile.  The profile resolves through
+   ``core/dispatcher.hw_profile`` -> ``autotune.get_hw_profile``: a
+   measured ``hw/<backend>`` cache entry when one exists, a tiny
+   one-time probe where probing is allowed (same policy as the
+   ``sync/`` probe: pallas by default, ``REPRO_AUTOTUNE=1`` forces,
+   ``=0`` disables), or the static per-backend default profile;
+3. **analytic constant**: ``(cap/1024)^2 * PAIR_SWEEP_US`` -- reachable
+   only when NO hardware profile exists (an unknown backend string, or
+   ``REPRO_ROOFLINE=0`` explicitly disabling the roofline layer).
+
 Determinism contract (tier-1-locked): every decision is a pure function
 of (backend, cache file contents, plan metadata) -- with sweeps/probes
 disabled (``REPRO_AUTOTUNE=0``) the model never measures, never writes,
 and returns identical answers for identical inputs, which is what makes
-an auto-configured run reproducible from its committed cache.
+an auto-configured run reproducible from its committed cache.  The
+roofline layer preserves this: with probing disabled the hardware
+profile is the static per-backend default, a constant.
 """
 from __future__ import annotations
 
@@ -72,11 +92,14 @@ import warnings
 
 from repro.core import plan as planlib
 from repro.runtime import autotune
+from repro.runtime import roofline as rooflib
 
 # analytic fallback for an unmeasured diameter bucket: the pair sweep is
 # O(cap^2), anchored at ~PAIR_SWEEP_US per (1024)^2-pair launch (the order
 # of the measured CPU-ref numbers in BENCH_diameter.json).  Only RATIOS
 # between bucket sizes matter to the decisions, not the absolute scale.
+# Reached only when no hardware profile exists -- see "Roofline fallback"
+# in the module docstring.
 PAIR_SWEEP_US = 200.0
 
 # fraction of pre-prune vertices assumed to survive the exact bound when no
@@ -156,6 +179,7 @@ class CostModel:
             )
         self.window_max_cases = int(window_max_cases)
         self._sync_us: float | None = None
+        self._hw_profile: dict | None | str = "unresolved"
         self._diam_us: dict = {}
         self._break_even: dict = {}
 
@@ -168,6 +192,21 @@ class CostModel:
 
             self._sync_us = dispatcher.sync_cost(self.backend, cache=self.cache)
         return self._sync_us
+
+    def hw_profile(self) -> dict | None:
+        """The backend's hardware roofline profile (None: no profile).
+
+        Resolved once per instance through ``dispatcher.hw_profile`` --
+        the cached/probed/default ladder documented in the module
+        docstring's "Roofline fallback" section.
+        """
+        if self._hw_profile == "unresolved":
+            from repro.core import dispatcher  # local import: avoid cycle
+
+            self._hw_profile = dispatcher.hw_profile(
+                self.backend, cache=self.cache
+            )
+        return self._hw_profile
 
     def _measured_us(self, key: str) -> float | None:
         hit = self.cache.get(key)
@@ -182,10 +221,13 @@ class CostModel:
     def diameter_case_us(self, cap: int, depth: int = 1) -> float:
         """Modeled PER-CASE pair-sweep cost at a (bucket, depth) pair.
 
-        A measured ``diameter/<backend>/M<cap>/B<depth>`` entry wins (its
-        ``us`` is the whole launch: divide by the depth bucket); the
-        nearest shallower measured depth is consulted next, and an
-        unmeasured bucket falls back to the analytic O(cap^2) estimate.
+        The estimate hierarchy (module docstring, "Roofline fallback"):
+        a measured ``diameter/<backend>/M<cap>/B<depth>`` entry wins (its
+        ``us`` is the whole launch: divide by the depth bucket; the
+        nearest shallower measured depth is consulted next); an
+        unmeasured bucket is priced by the roofline bound under the
+        backend's hardware profile; the analytic O(cap^2) constant
+        applies only when no profile exists.
         """
         cap = int(cap)
         d = autotune.batch_bucket(max(1, depth))
@@ -201,7 +243,12 @@ class CostModel:
                 break
             probe //= 2
         if out is None:
-            out = (cap / 1024.0) ** 2 * PAIR_SWEEP_US
+            profile = self.hw_profile()
+            if profile is not None:
+                flops, nbytes = rooflib.diameter_cost(cap, 1)
+                out = rooflib.roofline_us(flops, nbytes, profile)
+            else:
+                out = (cap / 1024.0) ** 2 * PAIR_SWEEP_US
         self._diam_us[memo] = out
         return out
 

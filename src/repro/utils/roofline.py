@@ -83,7 +83,41 @@ def collective_bytes(hlo_text: str) -> dict:
 # their static `length`, once not -- and scale the HLO numbers by the ratio.
 # This is exact for FLOPs up to sharding uniformity across iterations (all
 # our scan bodies shard identically per iteration).
+#
+# The walk counts dot_general FLOPs exactly (2*M*N*K) AND one FLOP per
+# output element of elementwise arithmetic / one per input element of
+# reductions: the extraction kernels (pair sweeps, marching cubes, the
+# intensity families) are elementwise-dominated with NO dots at all, so a
+# dot-only count would leave their correction ratio pinned at 1.0 and the
+# scan undercount uncorrected.
 # ---------------------------------------------------------------------------
+
+# elementwise primitives costed at one FLOP per OUTPUT element
+_ELEMENTWISE = frozenset({
+    "add", "sub", "mul", "div", "max", "min", "pow", "integer_pow",
+    "exp", "log", "log1p", "sqrt", "rsqrt", "abs", "neg", "floor",
+    "ceil", "round", "sign", "tanh", "logistic", "erf", "expm1",
+    "and", "or", "xor", "not", "eq", "ne", "lt", "le", "gt", "ge",
+    "select_n", "clamp", "rem", "nextafter", "atan2",
+    "cumsum", "cumprod", "cummax", "cummin", "cumlogsumexp",
+})
+
+# reduction primitives costed at one FLOP per INPUT element
+_REDUCTIONS = frozenset({
+    "reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+    "reduce_and", "reduce_or", "argmax", "argmin",
+})
+
+
+def _nelems(aval) -> float:
+    try:
+        n = 1
+        for d in aval.shape:
+            n *= int(d)
+        return float(n)
+    except Exception:
+        return 0.0
+
 
 def _aval_bytes(aval) -> float:
     try:
@@ -116,7 +150,11 @@ def _dot_flops(eqn) -> float:
 
 
 def jaxpr_cost(jaxpr, multiply_loops: bool = True):
-    """(dot_flops, naive_bytes) of a (closed) jaxpr, loop-aware."""
+    """(flops, naive_bytes) of a (closed) jaxpr, loop-aware.
+
+    FLOPs = exact dot_general count + one per elementwise output element
+    + one per reduction input element (see the section comment above).
+    """
     if hasattr(jaxpr, "jaxpr"):
         jaxpr = jaxpr.jaxpr
     flops = 0.0
@@ -149,6 +187,10 @@ def jaxpr_cost(jaxpr, multiply_loops: bool = True):
                 flops += sub_mult * f
                 byts += sub_mult * b
         else:
+            if name in _ELEMENTWISE:
+                flops += sum(_nelems(v.aval) for v in eqn.outvars)
+            elif name in _REDUCTIONS:
+                flops += sum(_nelems(v.aval) for v in eqn.invars)
             byts += sum(_aval_bytes(v.aval) for v in list(eqn.invars) + list(eqn.outvars))
     return flops, byts
 
@@ -169,21 +211,38 @@ def loop_corrections(fn, *abstract_args) -> tuple[float, float, dict]:
     return fc, bc, detail
 
 
+def compiled_cost(compiled) -> tuple[float, float]:
+    """Uncorrected (flops, bytes accessed) straight off ``cost_analysis()``.
+
+    Handles the older-jax list-of-dict return form; missing fields read
+    as zero.  Pair with :func:`loop_corrections` for scan-heavy programs.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older jax returns [dict]
+        ca = ca[0]
+    return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0))
+
+
 def cost_terms(compiled, n_chips: int, model_flops: float | None = None,
                hlo_text: str | None = None, flop_correction: float = 1.0,
                byte_correction: float = 1.0,
                bytes_override: float | None = None,
                collective_total_override: float | None = None,
-               structural_bytes: float | None = None) -> dict:
-    """The roofline report for one compiled executable."""
-    ca = compiled.cost_analysis()
-    if isinstance(ca, list):  # older jax returns [dict]
-        ca = ca[0]
-    flops = float(ca.get("flops", 0.0)) * flop_correction
+               structural_bytes: float | None = None,
+               hw: dict | None = None) -> dict:
+    """The roofline report for one compiled executable.
+
+    ``hw`` overrides the static mesh constants with a measured hardware
+    profile (``peak_flops_bf16`` / ``hbm_bw`` / ``ici_bw`` keys; missing
+    keys fall back to the mesh defaults) -- see
+    ``repro.runtime.autotune.get_hw_profile``.
+    """
+    raw_flops, raw_bytes = compiled_cost(compiled)
+    flops = raw_flops * flop_correction
     if bytes_override is not None:
         bytes_acc = bytes_override
     else:
-        bytes_acc = float(ca.get("bytes accessed", 0.0)) * byte_correction
+        bytes_acc = raw_bytes * byte_correction
     text = hlo_text if hlo_text is not None else compiled.as_text()
     coll = collective_bytes(text)
     coll_total = (
@@ -192,16 +251,17 @@ def cost_terms(compiled, n_chips: int, model_flops: float | None = None,
         else coll["total"]
     )
 
-    t_compute = flops / HW["peak_flops_bf16"]
-    t_memory = bytes_acc / HW["hbm_bw"]
-    t_collective = coll_total / HW["ici_bw"]
+    hw = {**HW, **(hw or {})}
+    t_compute = flops / hw["peak_flops_bf16"]
+    t_memory = bytes_acc / hw["hbm_bw"]
+    t_collective = coll_total / hw["ici_bw"]
     terms = {
         "compute_s": t_compute,
         "memory_s": t_memory,
         "collective_s": t_collective,
     }
     if structural_bytes is not None:
-        terms["memory_s"] = structural_bytes / HW["hbm_bw"]
+        terms["memory_s"] = structural_bytes / hw["hbm_bw"]
     dominant = max(terms, key=terms.get)
     bound = max(terms.values())
     report = {

@@ -9,6 +9,11 @@ The bugs PR 7 fixed, locked down with real throwaway git repos:
   no repo) skips the gate; any other lookup failure -- a corrupt
   committed record, an unreadable object -- must FAIL it, because a gate
   that skips on unexpected errors has stopped gating.
+
+Plus the vanished-row contract (a committed baseline row missing from
+the fresh record FAILS unless named in ``--allow-vanished`` -- it used
+to warn only, so dropped bench modes sailed through) and the advisory
+``--stages`` wall-time comparison.
 """
 import importlib.util
 import json
@@ -134,3 +139,72 @@ def test_load_baseline_triple_contract(cb, repo, monkeypatch):
     assert data is not None and skip is None and err is None
     data, skip, err = cb.load_baseline("BENCH_pipeline.json", "no-such-ref")
     assert data is None and skip is not None and err is None
+
+
+def test_vanished_baseline_row_fails(cb, repo, monkeypatch):
+    """Regression: a baseline row missing from the fresh record must FAIL.
+
+    The old behaviour only printed a warning, so deleting a bench mode
+    (and its committed trajectory rows with it) sailed through the gate;
+    a dropped row is indistinguishable from a broken bench wiring unless
+    someone acknowledges it explicitly.
+    """
+    _commit_baseline(repo, _record([("kept", 10.0), ("dropped", 10.0)]))
+    fresh = repo / "BENCH_pipeline.json"
+    fresh.write_text(json.dumps(_record([("kept", 10.0)])))
+    monkeypatch.chdir(repo)
+    assert cb.main(["--pipeline", str(fresh)]) == 1
+
+
+def test_allow_vanished_acknowledges_dropped_rows(cb, repo, monkeypatch):
+    _commit_baseline(repo, _record([("kept", 10.0), ("dropped", 10.0)]))
+    fresh = repo / "BENCH_pipeline.json"
+    fresh.write_text(json.dumps(_record([("kept", 10.0)])))
+    monkeypatch.chdir(repo)
+    # naming the dropped row passes; naming the WRONG row still fails
+    assert cb.main(["--pipeline", str(fresh),
+                    "--allow-vanished", "dropped"]) == 0
+    assert cb.main(["--pipeline", str(fresh),
+                    "--allow-vanished", "other"]) == 1
+
+
+def _stages(times):
+    return {"stages": dict(times)}
+
+
+def _commit_stages(repo, payload):
+    (repo / "ci_stage_times.json").write_text(json.dumps(payload))
+    _git(repo, "add", "ci_stage_times.json")
+    _git(repo, "commit", "-q", "-m", "stage times")
+
+
+def test_stage_growth_warns_but_never_fails(cb, repo, monkeypatch, capsys):
+    _commit_stages(repo, _stages([("tier1", 60), ("parity", 10)]))
+    fresh = repo / "ci_stage_times.json"
+    fresh.write_text(json.dumps(_stages([("tier1", 200), ("parity", 10)])))
+    monkeypatch.chdir(repo)
+    # >2x growth on tier1: advisory, so the gate still exits 0
+    assert cb.main(["--stages", str(fresh)]) == 0
+    out = capsys.readouterr().out
+    assert "stages/tier1" in out and "WARNING" in out
+    assert "stages/parity" in out and "OK" in out
+
+
+def test_stage_noise_floor_and_missing_stage(cb, repo, monkeypatch, capsys):
+    _commit_stages(repo, _stages([("quick", 1), ("gone", 30)]))
+    fresh = repo / "ci_stage_times.json"
+    # 1s -> 4s is quantisation, not growth; 'gone' vanished entirely
+    fresh.write_text(json.dumps(_stages([("quick", 4)])))
+    monkeypatch.chdir(repo)
+    assert cb.main(["--stages", str(fresh)]) == 0
+    out = capsys.readouterr().out
+    assert "below the noise floor" in out
+    assert "stages/gone" in out and "missing" in out
+
+
+def test_stages_missing_baseline_skips(cb, repo, monkeypatch):
+    _commit_baseline(repo, _record([("row", 1.0)]))  # some commit, no stages
+    fresh = repo / "ci_stage_times.json"
+    fresh.write_text(json.dumps(_stages([("tier1", 60)])))
+    monkeypatch.chdir(repo)
+    assert cb.main(["--stages", str(fresh)]) == 0

@@ -27,6 +27,7 @@ from repro.core import plan as planlib
 from repro.core.pipeline import BatchedExtractor
 from repro.data.synthetic import make_case
 from repro.runtime import autotune, costmodel
+from repro.runtime import roofline as rooflib
 
 pytestmark = pytest.mark.tier1
 
@@ -270,7 +271,7 @@ def test_cost_model_deterministic_given_fixed_cache(tmp_path, monkeypatch):
             cm.diameter_case_us(1024, 1),
             cm.diameter_case_us(1024, 8),
             cm.diameter_case_us(1024, 16),  # nearest shallower: the B8 row
-            cm.diameter_case_us(2048, 1),   # unmeasured: analytic fallback
+            cm.diameter_case_us(2048, 1),   # unmeasured: roofline fallback
             cm.break_even_depth(1024),
             cm.break_even_depth(4096),      # unmeasured: the default ladder
             cm.choose_schedule(metas),
@@ -282,7 +283,11 @@ def test_cost_model_deterministic_given_fixed_cache(tmp_path, monkeypatch):
     assert first[1] == 100.0        # B1: per-case == per-launch
     assert first[2] == 300.0 / 8    # B8: launch us / depth bucket
     assert first[3] == 300.0 / 8    # depth 16 falls back to the B8 row
-    assert first[4] == (2048 / 1024) ** 2 * costmodel.PAIR_SWEEP_US
+    # an unmeasured bucket rides the roofline estimate under the default
+    # 'ref' hardware profile, NOT the analytic constant
+    profile = autotune.DEFAULT_HW_PROFILES["ref"]
+    flops, nbytes = rooflib.diameter_cost(2048, 1)
+    assert first[4] == rooflib.roofline_us(flops, nbytes, profile)
     # per-case ladder 100/60/40/37.5: depth 4 is the first within 1.25x
     assert first[5] == 4
     assert first[6] == costmodel.DEFAULT_BREAK_EVEN_DEPTH
@@ -290,11 +295,41 @@ def test_cost_model_deterministic_given_fixed_cache(tmp_path, monkeypatch):
     assert open(path).read() == before
 
 
+def test_unmeasured_bucket_rides_roofline_with_empty_cache():
+    # empty cache + probing disabled: the default 'ref' profile prices
+    # the bucket via the roofline bound (estimate hierarchy step 2)
+    cm = costmodel.CostModel("ref")
+    profile = autotune.DEFAULT_HW_PROFILES["ref"]
+    for cap in (512, 2048, 8192):
+        flops, nbytes = rooflib.diameter_cost(cap, 1)
+        assert cm.diameter_case_us(cap, 1) == rooflib.roofline_us(
+            flops, nbytes, profile
+        )
+        assert cm.diameter_case_us(cap, 1) != (
+            cap / 1024.0
+        ) ** 2 * costmodel.PAIR_SWEEP_US
+
+
+def test_analytic_constant_only_without_hw_profile(monkeypatch):
+    # REPRO_ROOFLINE=0 removes the hardware profile: the analytic
+    # constant (estimate hierarchy step 3) must take over -- and an
+    # unknown backend string has no default profile either
+    monkeypatch.setenv("REPRO_ROOFLINE", "0")
+    cm = costmodel.CostModel("ref")
+    assert cm.hw_profile() is None
+    assert cm.diameter_case_us(2048, 1) == (
+        2048 / 1024.0
+    ) ** 2 * costmodel.PAIR_SWEEP_US
+    monkeypatch.delenv("REPRO_ROOFLINE")
+    assert autotune.get_hw_profile("not-a-backend") is None
+
+
 def test_sync_cost_defaults_without_calibration():
     # REPRO_AUTOTUNE=0 (fixture): no probe may run, no entry exists
     assert autotune.get_sync_cost("ref") == autotune.DEFAULT_SYNC_US
     cm = costmodel.CostModel("ref")
     assert cm.sync_cost_us() == autotune.DEFAULT_SYNC_US
+    assert cm.hw_profile() == autotune.DEFAULT_HW_PROFILES["ref"]
     assert not os.path.exists(os.environ["REPRO_AUTOTUNE_CACHE"])
 
 

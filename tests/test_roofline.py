@@ -1,0 +1,250 @@
+"""Roofline cost-model gates: HLO/jaxpr parsers + the agreement contract.
+
+Two layers under test:
+
+* ``repro.utils.roofline`` -- the compiled-artifact parsers: dtype/shape
+  byte sizing (unknown dtypes must be SKIPPED, not crash), collective
+  accounting over tuple results and async -start/-done pairs, and the
+  loop-aware jaxpr FLOP/byte walk (elementwise + reduction counting, scan
+  trip-count correction).
+
+* ``repro.runtime.roofline`` -- the structural work models the cost model
+  prices unmeasured launches with.  The CI ``roofline`` stage's core
+  contract lives here: for every (kind, bucket) in ``AGREEMENT_GRID`` the
+  plan-derived FLOPs/bytes must agree with XLA's loop-corrected
+  ``cost_analysis()`` on the real 'ref' launch within ``AGREEMENT_RTOL``
+  (10%).  A drifted kernel implementation or a stale ``CAL`` constant
+  fails this gate, not the scheduling heuristics downstream of it.
+"""
+import math
+
+import pytest
+
+from repro.core import plan as planlib
+from repro.runtime import roofline
+from repro.utils import roofline as uro
+
+pytestmark = pytest.mark.tier1
+
+
+# ---------------------------------------------------------------------------
+# utils/roofline: shape + collective parsers
+# ---------------------------------------------------------------------------
+
+def test_shape_bytes_counts_known_dtypes():
+    assert uro.shape_bytes("f32[4,512]") == 4 * 512 * 4
+    assert uro.shape_bytes("bf16[8]") == 8 * 2
+    assert uro.shape_bytes("pred[3,3]") == 9
+    # scalar: empty dims -> one element
+    assert uro.shape_bytes("f32[]") == 4
+    # several shapes in one string sum
+    assert uro.shape_bytes("f32[2] u8[2]") == 8 + 2
+
+
+def test_shape_bytes_skips_unknown_dtypes():
+    # an unrecognised dtype token must contribute ZERO, not raise --
+    # future XLA dtypes (f4, mx formats, ...) should never crash the gate
+    assert uro.shape_bytes("q8[1024]") == 0
+    assert uro.shape_bytes("q8[1024] f32[2]") == 8
+
+
+def test_collective_bytes_plain_and_tuple_results():
+    hlo = """
+      %ag = bf16[4,512]{1,0} all-gather(%x), dimensions={0}
+      %t = (f32[8]{0}, f32[8]{0}) all-reduce(%a, %b), to_apply=%sum
+    """
+    out = uro.collective_bytes(hlo)
+    assert out["all-gather"] == 4 * 512 * 2
+    # tuple result: both element shapes count
+    assert out["all-reduce"] == 2 * 8 * 4
+    assert out["count"] == 2
+    assert out["total"] == out["all-gather"] + out["all-reduce"]
+
+
+def test_collective_bytes_async_start_done_counted_once():
+    hlo = """
+      %s = f32[1024]{0} reduce-scatter-start(%x), dimensions={0}
+      %d = f32[1024]{0} reduce-scatter-done(%s)
+    """
+    out = uro.collective_bytes(hlo)
+    assert out["reduce-scatter"] == 1024 * 4  # -start counted, -done skipped
+    assert out["count"] == 1
+
+
+def test_collective_bytes_skips_unknown_dtype_shapes():
+    out = uro.collective_bytes("%x = q8[4096]{0} all-to-all(%y)")
+    assert out["all-to-all"] == 0
+    assert out["count"] == 1  # the op itself is still seen
+
+
+# ---------------------------------------------------------------------------
+# utils/roofline: loop-aware jaxpr walk
+# ---------------------------------------------------------------------------
+
+def test_jaxpr_cost_elementwise_and_reduction():
+    import jax
+    import jax.numpy as jnp
+
+    def fn(x):
+        return jnp.sum(x * x)
+
+    closed = jax.make_jaxpr(fn)(jnp.zeros((8, 16), jnp.float32))
+    flops, byts = uro.jaxpr_cost(closed)
+    # one mul per output element + one reduce-add per input element
+    assert flops == pytest.approx(2 * 8 * 16)
+    assert byts > 0
+
+
+def test_jaxpr_cost_scan_multiplies_trip_count():
+    import jax
+    import jax.numpy as jnp
+
+    length = 13
+
+    def fn(x):
+        def body(carry, _):
+            return carry + x, None
+
+        out, _ = jax.lax.scan(body, x, None, length=length)
+        return out
+
+    closed = jax.make_jaxpr(fn)(jnp.zeros((32,), jnp.float32))
+    f_mult, _ = uro.jaxpr_cost(closed, multiply_loops=True)
+    f_once, _ = uro.jaxpr_cost(closed, multiply_loops=False)
+    assert f_mult == pytest.approx(length * f_once)
+
+    fc, bc, _ = uro.loop_corrections(fn, jnp.zeros((32,), jnp.float32))
+    assert fc == pytest.approx(length)
+
+
+def test_compiled_cost_reads_cost_analysis():
+    import jax
+    import jax.numpy as jnp
+
+    def fn(a, b):
+        return a @ b
+
+    x = jnp.zeros((64, 64), jnp.float32)
+    compiled = jax.jit(fn).lower(x, x).compile()
+    flops, byts = uro.compiled_cost(compiled)
+    # a 64^3 matmul is 2*64^3 FLOPs; XLA reports exactly that on CPU
+    assert flops == pytest.approx(2 * 64**3, rel=0.01)
+    assert byts >= 3 * 64 * 64 * 4  # two operands + result, at least
+
+
+# ---------------------------------------------------------------------------
+# runtime/roofline: structural models + plan census
+# ---------------------------------------------------------------------------
+
+def _meta(shape, cap, intensity=False):
+    return planlib.CaseMeta(
+        shape=shape, roi_shape=shape, vertex_cap=cap, n_vertices=cap // 2,
+        intensity=intensity,
+    )
+
+
+def test_work_census_kinds_and_depths():
+    metas = [
+        _meta((32, 32, 32), 1024),
+        _meta((32, 32, 32), 1024),
+        _meta((64, 64, 64), 2048),
+    ]
+    plan = planlib.build_plan(metas, schedule="counted",
+                              families=("shape", "firstorder", "glcm"))
+    items = plan.work_census()
+    by_kind = {}
+    for it in items:
+        by_kind.setdefault(it.kind, []).append(it)
+    # one MC + one firstorder + one glcm item per shape group
+    assert {len(by_kind[k]) for k in ("mc", "firstorder", "glcm")} == {2}
+    # one prune + compact + diameter chain per cap group
+    assert {len(by_kind[k]) for k in ("prune", "compact", "diameter")} == {2}
+    assert sorted(it.depth for it in by_kind["mc"]) == [1, 2]
+    # counted schedule: the diameter sweep prices the conservative cap
+    assert sorted(it.m for it in by_kind["diameter"]) == [1024, 2048]
+
+
+def test_work_census_static_sweeps_at_target():
+    metas = [_meta((32, 32, 32), 2048)]
+    plan = planlib.build_plan(metas, schedule="static")
+    diam = [it for it in plan.work_census() if it.kind == "diameter"]
+    compact = [it for it in plan.work_census() if it.kind == "compact"]
+    assert len(diam) == 1 and len(compact) == 1
+    # static schedule sweeps the aligned compaction target, not the cap
+    assert diam[0].m == compact[0].cap
+    assert diam[0].m <= 2048
+
+
+def test_plan_cost_sums_work_items():
+    metas = [_meta((32, 32, 32), 1024), _meta((48, 48, 48), 2048)]
+    plan = planlib.build_plan(metas, schedule="counted")
+    cost = roofline.plan_cost(plan)
+    f = sum(roofline.work_item_cost(it)[0] for it in plan.work_census())
+    b = sum(roofline.work_item_cost(it)[1] for it in plan.work_census())
+    assert cost["flops"] == pytest.approx(f)
+    assert cost["bytes"] == pytest.approx(b)
+    assert set(cost["per_kind"]) == {"mc", "prune", "compact", "diameter"}
+
+
+def test_work_item_cost_unknown_kind_raises():
+    with pytest.raises(ValueError, match="unknown work item kind"):
+        roofline.work_item_cost(planlib.WorkItem(kind="fft", depth=1))
+
+
+def test_roofline_us_is_max_of_compute_and_memory():
+    profile = {"peak_flops": 1e9, "mem_bw": 1e8}
+    # compute-bound: 1e9 FLOPs at 1e9/s = 1s; 1e6 B at 1e8/s = 10ms
+    assert roofline.roofline_us(1e9, 1e6, profile) == pytest.approx(1e6)
+    # memory-bound: 1e8 B at 1e8/s = 1s
+    assert roofline.roofline_us(1e3, 1e8, profile) == pytest.approx(1e6)
+
+
+def test_mc_cost_follows_padded_slab_volume():
+    # 34^3: nz-1=33 cells -> 2 slabs of 32 -> 64*34*34 padded cells
+    assert roofline.mc_slab_cells((34, 34, 34)) == 64 * 34 * 34
+    # depth scales linearly
+    f1, b1 = roofline.mc_cost((34, 34, 34), depth=1)
+    f4, b4 = roofline.mc_cost((34, 34, 34), depth=4)
+    assert f4 == pytest.approx(4 * f1) and b4 == pytest.approx(4 * b1)
+
+
+# ---------------------------------------------------------------------------
+# the agreement contract (what the CI roofline stage asserts)
+# ---------------------------------------------------------------------------
+
+def _grid_id(spec):
+    parts = [spec["kind"]]
+    if "m" in spec:
+        parts.append(f"M{spec['m']}")
+    if "cap" in spec:
+        parts.append(f"c{spec['cap']}")
+    if "shape" in spec:
+        parts.append("x".join(str(s) for s in spec["shape"]))
+    return "-".join(parts)
+
+
+@pytest.mark.parametrize(
+    "spec", roofline.AGREEMENT_GRID, ids=[_grid_id(s) for s in roofline.AGREEMENT_GRID]
+)
+def test_model_agrees_with_cost_analysis(spec):
+    """Plan census == loop-corrected cost_analysis() within 10% on ref."""
+    rep = roofline.agreement(
+        spec["kind"], m=spec.get("m"), cap=spec.get("cap"),
+        shape=spec.get("shape"),
+    )
+    assert rep["ok"], (
+        f"{_grid_id(spec)}: flops model={rep['model_flops']:.3g} "
+        f"xla={rep['xla_flops']:.3g} (rel {rep['flops_rel_err']:.1%}); "
+        f"bytes model={rep['model_bytes']:.3g} "
+        f"xla={rep['xla_bytes']:.3g} (rel {rep['bytes_rel_err']:.1%}); "
+        f"tolerance {roofline.AGREEMENT_RTOL:.0%}"
+    )
+
+
+def test_agreement_checks_are_nontrivial():
+    # the gate must be comparing real numbers, not inf/0 placeholders
+    rep = roofline.agreement("diameter", m=512)
+    assert rep["xla_flops"] > 0 and rep["xla_bytes"] > 0
+    assert rep["model_flops"] > 0 and rep["model_bytes"] > 0
+    assert math.isfinite(rep["flops_rel_err"])
+    assert math.isfinite(rep["bytes_rel_err"])
